@@ -1,0 +1,59 @@
+"""Shared benchmark utilities: pair groups, timing, result records."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.exact.graph import Graph
+from repro.data.graphs import graph_pair_groups
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
+
+# CPU-feasible stand-ins for the paper's sizes (paper: |V| up to 30 in C++;
+# our exact reference is pure python on one core, so groups are smaller —
+# the *orderings* the paper claims are what we reproduce).
+QUICK_SIZES = (8, 10, 12)
+FULL_SIZES = (8, 10, 12, 14)
+OPS = (1, 2, 3, 4, 5)
+
+
+def groups(quick: bool = True, pairs_per_group: int = 5,
+           sizes: Optional[Tuple[int, ...]] = None, seed: int = 42):
+    sz = sizes or (QUICK_SIZES if quick else FULL_SIZES)
+    return graph_pair_groups(seed, sizes=sz, ops=OPS,
+                             pairs_per_group=pairs_per_group)
+
+
+def timed(fn: Callable, *args, **kw) -> Tuple[Any, float]:
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def record(name: str, rows: List[Dict[str, Any]]) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
+
+
+def print_table(title: str, rows: List[Dict[str, Any]],
+                cols: List[str]) -> None:
+    print(f"\n== {title} ==")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def geometric_mean(xs: List[float]) -> float:
+    xs = [max(x, 1e-12) for x in xs]
+    return float(np.exp(np.mean(np.log(xs))))

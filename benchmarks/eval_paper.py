@@ -1,0 +1,246 @@
+"""Paper Evals I–IX (one per figure of §6 / App. A.4), on the exact
+paper-faithful reference implementation.
+
+Metrics follow the paper: processing time and *search space* = number of
+best-extension computations.  Sizes are CPU-scaled (see common.py); each
+eval asserts the paper's qualitative claim and records the measured rows.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import (geometric_mean, groups, print_table, record,
+                               timed)
+from repro.core.exact.search import ged, ged_verify
+
+DEFAULT_X = 4            # perturbation group (paper defaults to GED=9)
+
+
+def _run_group(pairs, bound: str, strategy: str, expand_all: bool = True,
+               tau=None) -> Dict[str, float]:
+    times, space, expanded = [], [], []
+    for q, g in pairs:
+        if tau is None:
+            res, dt = timed(ged, q, g, bound=bound, strategy=strategy,
+                            expand_all=expand_all)
+        else:
+            res, dt = timed(ged_verify, q, g, tau, bound=bound,
+                            strategy=strategy, expand_all=expand_all)
+        times.append(dt)
+        space.append(res.stats.best_extension_calls)
+        expanded.append(res.stats.expanded)
+    return {"time_s": float(np.mean(times)),
+            "space": float(np.mean(space)),
+            "expanded": float(np.mean(expanded))}
+
+
+def _sweep(gs, algos, x: int = DEFAULT_X, tau=None) -> List[Dict]:
+    rows = []
+    sizes = sorted({k[0] for k in gs})
+    for n in sizes:
+        pairs = gs[(n, x)]
+        for name, (bound, strategy, expand_all) in algos.items():
+            r = _run_group(pairs, bound, strategy, expand_all, tau=tau)
+            rows.append({"algo": name, "V": n, **r})
+    return rows
+
+
+def eval_1_against_existing(quick=True) -> List[Dict]:
+    """Fig. 6: AStar+-BMa / DFS+-LSa / AStar+-LS vs DF_GED (= DFS+-LS)."""
+    gs = groups(quick)
+    algos = {
+        "AStar+-BMa": ("BMa", "astar", True),
+        "DFS+-LSa": ("LSa", "dfs", True),
+        "AStar+-LS": ("LS", "astar", True),
+        "DF_GED(DFS+-LS)": ("LS", "dfs", True),
+    }
+    rows = _sweep(gs, algos)
+    by = {r["algo"]: [] for r in rows}
+    for r in rows:
+        by[r["algo"]].append(r["space"])
+    assert geometric_mean(by["AStar+-BMa"]) < geometric_mean(
+        by["DF_GED(DFS+-LS)"]), "paper: AStar+-BMa beats DF_GED"
+    print_table("Eval-I processing time / search space vs existing "
+                "(x=4 group)", rows, ["algo", "V", "time_s", "space"])
+    record("eval1_against_existing", rows)
+    return rows
+
+
+def eval_2_anchor_aware(quick=True) -> List[Dict]:
+    """Fig. 7/15: anchor-aware bounds vs their plain counterparts."""
+    gs = groups(quick)
+    algos = {
+        "AStar+-BMa": ("BMa", "astar", True),
+        "AStar+-BM": ("BM", "astar", True),
+        "AStar+-LSa": ("LSa", "astar", True),
+        "AStar+-LS": ("LS", "astar", True),
+    }
+    rows = _sweep(gs, algos)
+    sp = lambda a: geometric_mean([r["space"] for r in rows
+                                  if r["algo"] == a])
+    assert sp("AStar+-BMa") <= sp("AStar+-BM")
+    assert sp("AStar+-LSa") <= sp("AStar+-LS")
+    print_table("Eval-II anchor-aware vs plain bounds", rows,
+                ["algo", "V", "time_s", "space"])
+    record("eval2_anchor_aware", rows)
+    return rows
+
+
+def eval_3_lower_bounds(quick=True) -> List[Dict]:
+    """Fig. 8/16: BMaN <= BMa <= LSa <= SMa search-space ordering."""
+    gs = groups(quick)
+    algos = {
+        "AStar+-BMaN": ("BMaN", "astar", True),
+        "AStar+-BMa": ("BMa", "astar", True),
+        "AStar+-LSa": ("LSa", "astar", True),
+        "AStar+-SMa": ("SMa", "astar", True),
+    }
+    rows = _sweep(gs, algos)
+    # search space = EXTENDED STATES here: BMaN's per-child naive bound
+    # makes one "best extension computation" score each child separately,
+    # so the state-count is the comparable metric (paper Figs. 8/16).
+    sp = lambda a: geometric_mean([r["expanded"] for r in rows
+                                  if r["algo"] == a])
+    assert sp("AStar+-BMaN") <= sp("AStar+-BMa") * 1.05
+    assert sp("AStar+-BMa") <= sp("AStar+-LSa") * 1.05
+    assert sp("AStar+-LSa") <= sp("AStar+-SMa") * 1.05
+    # the paper's time trade-off: BMaN has the smallest space but runs
+    # SLOWER than BMa (per-child cubic solves)
+    t = lambda a: geometric_mean([r["time_s"] for r in rows
+                                 if r["algo"] == a])
+    assert t("AStar+-BMaN") > t("AStar+-BMa")
+    print_table("Eval-III lower bounds within AStar+", rows,
+                ["algo", "V", "time_s", "space", "expanded"])
+    record("eval3_lower_bounds", rows)
+    return rows
+
+
+def eval_4_expand_all(quick=True) -> List[Dict]:
+    """Fig. 9: expand-all strategy vs -EO (best-child-only)."""
+    gs = groups(quick)
+    algos = {
+        "AStar+-BMa": ("BMa", "astar", True),
+        "AStar+-BMa-EO": ("BMa", "astar", False),
+        "AStar+-LSa": ("LSa", "astar", True),
+        "AStar+-LSa-EO": ("LSa", "astar", False),
+    }
+    rows = _sweep(gs, algos)
+    t = lambda a: geometric_mean([r["time_s"] for r in rows
+                                  if r["algo"] == a])
+    # paper: expand-all helps LSa consistently, BMa little
+    assert t("AStar+-LSa") <= t("AStar+-LSa-EO") * 1.1
+    print_table("Eval-IV expand-all strategy", rows,
+                ["algo", "V", "time_s", "space"])
+    record("eval4_expand_all", rows)
+    return rows
+
+
+def eval_5_astar_vs_dfs(quick=True) -> List[Dict]:
+    """Fig. 10/17: AStar+ vs DFS+ for computation (same bound)."""
+    gs = groups(quick)
+    algos = {
+        "AStar+-BMa": ("BMa", "astar", True),
+        "DFS+-BMa": ("BMa", "dfs", True),
+        "AStar+-LSa": ("LSa", "astar", True),
+        "DFS+-LSa": ("LSa", "dfs", True),
+    }
+    rows = _sweep(gs, algos)
+    sp = lambda a: geometric_mean([r["space"] for r in rows
+                                  if r["algo"] == a])
+    assert sp("AStar+-BMa") <= sp("DFS+-BMa")
+    assert sp("AStar+-LSa") <= sp("DFS+-LSa")
+    print_table("Eval-V AStar+ vs DFS+ (computation)", rows,
+                ["algo", "V", "time_s", "space"])
+    record("eval5_astar_vs_dfs", rows)
+    return rows
+
+
+def eval_6_scalability(quick=True) -> List[Dict]:
+    """Fig. 11/18: scalability in |V| for AStar+-BMa / AStar+-LSa."""
+    sizes = (8, 12, 16) if quick else (8, 12, 16, 20)
+    gs = groups(quick, sizes=sizes, pairs_per_group=3)
+    algos = {
+        "AStar+-BMa": ("BMa", "astar", True),
+        "AStar+-LSa": ("LSa", "astar", True),
+    }
+    rows = _sweep(gs, algos, x=2)
+    print_table("Eval-VI scalability (x=2 group)", rows,
+                ["algo", "V", "time_s", "space"])
+    record("eval6_scalability", rows)
+    return rows
+
+
+def _tau_sweep(gs, algos, quick=True) -> List[Dict]:
+    rows = []
+    n = max(k[0] for k in gs)
+    taus = (3, 5, 7, 9)
+    for tau in taus:
+        pairs = list(itertools.chain.from_iterable(
+            gs[(n, x)] for x in (1, 3, 5)))
+        for name, (bound, strategy, expand_all) in algos.items():
+            r = _run_group(pairs, bound, strategy, expand_all, tau=tau)
+            rows.append({"algo": name, "tau": tau, **r})
+    return rows
+
+
+def eval_7_verification_astar_vs_dfs(quick=True) -> List[Dict]:
+    """Fig. 12/19: AStar+ vs DFS+ for verification (vary tau)."""
+    gs = groups(quick)
+    algos = {
+        "AStar+-BMa": ("BMa", "astar", True),
+        "DFS+-BMa": ("BMa", "dfs", True),
+        "AStar+-LSa": ("LSa", "astar", True),
+        "DFS+-LSa": ("LSa", "dfs", True),
+    }
+    rows = _tau_sweep(gs, algos, quick)
+    sp = lambda a: geometric_mean([r["space"] for r in rows
+                                  if r["algo"] == a])
+    # paper: the verification gap is small; AStar+ never meaningfully worse
+    assert sp("AStar+-BMa") <= sp("DFS+-BMa") * 1.25
+    print_table("Eval-VII AStar+ vs DFS+ (verification, vary tau)", rows,
+                ["algo", "tau", "time_s", "space"])
+    record("eval7_verify_astar_vs_dfs", rows)
+    return rows
+
+
+def eval_8_verification_vs_existing(quick=True) -> List[Dict]:
+    """Fig. 13: AStar+-BMa / DFS+-BMa vs AStar+-LS (A*GED stand-in)."""
+    gs = groups(quick)
+    algos = {
+        "AStar+-BMa": ("BMa", "astar", True),
+        "DFS+-BMa": ("BMa", "dfs", True),
+        "AStar+-LS": ("LS", "astar", True),
+    }
+    rows = _tau_sweep(gs, algos, quick)
+    sp = lambda a: geometric_mean([r["space"] for r in rows
+                                  if r["algo"] == a])
+    assert sp("AStar+-BMa") < sp("AStar+-LS")
+    print_table("Eval-VIII verification vs existing", rows,
+                ["algo", "tau", "time_s", "space"])
+    record("eval8_verify_vs_existing", rows)
+    return rows
+
+
+def eval_9_verification_scalability(quick=True) -> List[Dict]:
+    """Fig. 14: verification scalability in |V| (tau = 5)."""
+    sizes = (8, 12, 16) if quick else (8, 12, 16, 20)
+    gs = groups(quick, sizes=sizes, pairs_per_group=3)
+    algos = {
+        "AStar+-BMa": ("BMa", "astar", True),
+        "DFS+-BMa": ("BMa", "dfs", True),
+    }
+    rows = _sweep(gs, algos, x=2, tau=5.0)
+    print_table("Eval-IX verification scalability (tau=5)", rows,
+                ["algo", "V", "time_s", "space"])
+    record("eval9_verify_scalability", rows)
+    return rows
+
+
+ALL = (eval_1_against_existing, eval_2_anchor_aware, eval_3_lower_bounds,
+       eval_4_expand_all, eval_5_astar_vs_dfs, eval_6_scalability,
+       eval_7_verification_astar_vs_dfs, eval_8_verification_vs_existing,
+       eval_9_verification_scalability)

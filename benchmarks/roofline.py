@@ -1,0 +1,100 @@
+"""Roofline table from the dry-run JSONs (results/dryrun/*.json).
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness ratio, peak bytes/device,
+and the MFU upper bound implied by the dominant term.
+
+Usage:  python -m benchmarks.roofline [--mesh single] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List
+
+DRYRUN = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+COLS = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+        "bottleneck", "useful_ratio", "peak_GiB", "mfu_ub")
+
+
+def load(mesh: str = "all") -> List[Dict]:
+    rows = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        if mesh != "all" and r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "bottleneck": r["reason"],
+                         "skipped": True})
+            continue
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"],
+                         "bottleneck": "ERROR: " + r.get("error", "?"),
+                         "skipped": True})
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            "bottleneck": t["bottleneck"].replace("_s", ""),
+            "useful_ratio": t.get("useful_flops_ratio"),
+            "peak_GiB": r["memory"]["peak_bytes_per_device"] / 2 ** 30,
+            "mfu_ub": t.get("mfu_upper_bound"),
+            "skipped": False,
+        })
+    return rows
+
+
+def _fmt(v, nd=4):
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.{nd}g}"
+    return str(v)
+
+
+def markdown(rows: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "bottleneck | useful | peak GiB/dev | MFU ub |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"— | — | — | {r['bottleneck']} | — | — | — |")
+        else:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{_fmt(r['compute_s'])} | {_fmt(r['memory_s'])} | "
+                f"{_fmt(r['collective_s'])} | {r['bottleneck']} | "
+                f"{_fmt(r['useful_ratio'], 3)} | {_fmt(r['peak_GiB'], 3)} | "
+                f"{_fmt(r['mfu_ub'], 3)} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "all"))
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    if not rows:
+        print("no dry-run results found — run "
+              "`python -m repro.launch.dryrun` first")
+        return
+    if args.md:
+        print(markdown(rows))
+        return
+    print(",".join(COLS))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in COLS))
+
+
+if __name__ == "__main__":
+    main()

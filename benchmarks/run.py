@@ -1,0 +1,78 @@
+"""Benchmark harness entry point: one eval per paper figure (Evals I–IX on
+the paper-faithful reference), the batched-engine suite, kernel validation,
+and the roofline summary from the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick (default)
+  PYTHONPATH=src python -m benchmarks.run --full     # larger sizes
+  PYTHONPATH=src python -m benchmarks.run --only eval5,engine
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import eval_engine, eval_paper
+from benchmarks.roofline import load as roofline_load, markdown
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma list: eval1..eval9, engine, kernels, roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+
+    def want(tag: str) -> bool:
+        return not only or tag in only
+
+    t0 = time.time()
+    failures = []
+
+    paper_map = {f"eval{i+1}": fn for i, fn in enumerate(eval_paper.ALL)}
+    for tag, fn in paper_map.items():
+        if not want(tag):
+            continue
+        try:
+            fn(quick=quick)
+        except Exception as e:
+            failures.append((tag, e))
+            traceback.print_exc()
+
+    engine_map = {
+        "engine": (eval_engine.engine_agreement_and_throughput,
+                   eval_engine.engine_verification,
+                   eval_engine.engine_bound_ablation,
+                   eval_engine.engine_sweeps_ablation,
+                   eval_engine.scheduler_cost_model),
+        "kernels": (eval_engine.kernel_validation,),
+    }
+    for tag, fns in engine_map.items():
+        if not want(tag):
+            continue
+        for fn in fns:
+            try:
+                fn(quick=quick)
+            except Exception as e:
+                failures.append((tag, e))
+                traceback.print_exc()
+
+    if want("roofline"):
+        rows = roofline_load("single")
+        if rows:
+            print("\n== Roofline (single-pod, from dry-run artifacts) ==")
+            print(markdown(rows))
+
+    print(f"\nbenchmarks done in {time.time() - t0:.0f}s; "
+          f"{len(failures)} failures")
+    for tag, e in failures:
+        print(f"  FAIL {tag}: {e}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

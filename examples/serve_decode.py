@@ -1,0 +1,33 @@
+"""Serve a small LM with batched requests: prefill once, decode with a
+donated KV cache (steady-state decode allocates nothing).  Exercises three
+cache families: dense GQA ring/global (gemma3), pure-SSM state (rwkv6),
+and hybrid mamba+shared-attention (zamba2).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.config import reduced
+from repro.models.params import init_params, param_count
+from repro.serving import generate
+
+for arch in ("gemma3-1b", "rwkv6-3b", "zamba2-7b"):
+    base = get_arch(arch)
+    cfg = reduced(base, layers=3 if base.window_pattern else 2)
+    cfg = dataclasses.replace(cfg, remat="none")
+    params = init_params(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    batch, prompt_len, max_new = 4, 24, 12
+    prompt = rng.integers(0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+
+    t0 = time.time()
+    out = generate(params, prompt, cfg, max_new=max_new, impl="naive")
+    dt = time.time() - t0
+    print(f"{arch:12s} ({param_count(cfg)/1e6:5.1f}M reduced) "
+          f"batch={batch} prompt={prompt_len} new={max_new}  "
+          f"{batch*max_new/dt:6.1f} tok/s   sample={out[0][:6].tolist()}")

@@ -1,0 +1,49 @@
+"""Graph similarity search over a database — the paper's target application
+(§1, §5.3), end to end through the serving stack.
+
+A query graph is checked against a database of molecules; the service
+predicts per-pair difficulty, LPT-packs batches (straggler mitigation),
+runs the batched AStar+ engine, and escalates uncertified pairs up to the
+paper-faithful host solver.  Every returned verdict is certified exact.
+
+    PYTHONPATH=src python examples/similarity_search.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.data.graphs import aids_like_graph, perturb
+from repro.serving import GedRequest, GedVerificationService
+
+rng = np.random.default_rng(1)
+
+# --- database: 80 AIDS-like molecules, some of them near-copies of others --
+DB = []
+for i in range(60):
+    DB.append(aids_like_graph(rng, int(rng.integers(8, 14))))
+query = DB[0]
+for _ in range(20):                       # planted near-duplicates
+    DB.append(perturb(rng, query, int(rng.integers(1, 5)),
+                      n_vlabels=62, n_elabels=3))
+
+TAU = 4.0
+svc = GedVerificationService(batch_size=32, slots=16)
+
+t0 = time.time()
+results = svc.verify([GedRequest(query, g, TAU) for g in DB])
+dt = time.time() - t0
+
+hits = [i for i, r in enumerate(results) if r.similar]
+print(f"database size  : {len(DB)}")
+print(f"tau            : {TAU}")
+print(f"similar graphs : {len(hits)} -> indices {hits[:12]}{'...' if len(hits) > 12 else ''}")
+print(f"wall time      : {dt:.2f}s ({len(DB)/dt:.1f} pairs/s, single CPU)")
+print(f"all certified  : {all(r.certified for r in results)}")
+print(f"service stats  : {svc.stats}")
+
+# sanity: the planted near-duplicates with few edits should be among hits
+planted = set(range(60, 80))
+found_planted = planted & set(hits)
+print(f"planted near-duplicates found: {len(found_planted)}/20")
+assert 0 in hits, "query vs itself must be similar"

@@ -1,0 +1,85 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps with the production stack — deterministic data pipeline,
+AdamW, async atomic checkpoints, and an injected node failure at step 120
+that the loop recovers from with exact replay.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(~100M params: 8 layers x d_model 512 x ff 2048, vocab 32k.)
+"""
+
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_arch
+from repro.data.tokens import TokenPipeline
+from repro.models import transformer as T
+from repro.models.config import reduced
+from repro.models.params import init_params, param_count
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import FaultInjector, train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--fault-step", type=int, default=120)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch("qwen3-8b"), layers=8, d_model=512,
+                  vocab=32_768, d_ff=2048, heads=8, kv_heads=4)
+    cfg = dataclasses.replace(cfg, remat="none")
+    print(f"model: {cfg.name}-reduced  params={param_count(cfg)/1e6:.1f}M")
+
+    params = init_params(cfg, seed=0)
+    opt_cfg = AdamWConfig(lr=3e-4, warmup=20, total_steps=args.steps)
+    opt = adamw_init(params)
+    raw_step = T.make_train_step(cfg, opt_cfg, accum=1, impl="naive")
+    jit_step = jax.jit(raw_step, donate_argnums=(0, 1))
+
+    def step_fn(state, batch):
+        p, o = state
+        tokens, labels = batch
+        p, o, m = jit_step(p, o, {"tokens": jnp.asarray(tokens),
+                                  "labels": jnp.asarray(labels)})
+        return (p, o), m
+
+    def make_pipeline(start):
+        return TokenPipeline(0, args.batch, args.seq, cfg.vocab,
+                             start_step=start)
+
+    ckpt_every = max(10, min(50, args.steps // 3))
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = CheckpointManager(d, keep_last_k=2)
+        injector = FaultInjector(
+            [args.fault_step]
+            if args.fault_step and args.fault_step > ckpt_every else [])
+        t0 = time.time()
+        (params, opt), hist = train_loop(
+            step_fn, (params, opt), make_pipeline, ckpt,
+            total_steps=args.steps, ckpt_every=ckpt_every, injector=injector,
+            log_every=20,
+            on_metrics=lambda s, m: print(
+                f"step {s:4d}  loss {m['loss']:.4f}  "
+                f"gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}"))
+        dt = time.time() - t0
+
+    losses = [h["loss"] for h in hist]
+    print(f"\n{args.steps} steps in {dt:.0f}s "
+          f"({args.steps * args.batch * args.seq / dt:.0f} tok/s)")
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"(injected fault at step {args.fault_step}, recovered)")
+    assert losses[-1] < losses[0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

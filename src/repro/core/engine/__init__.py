@@ -1,0 +1,23 @@
+"""Batched JAX GED engine — the TPU-native adaptation of the paper.
+
+The paper's pointer-chasing branch-and-bound is re-expressed as fixed-shape
+tensor programs (see DESIGN.md §2):
+
+* ``tensor_graphs`` — padded dense pair representation + host converters
+* ``bounds``        — batched anchor-aware bound components (histogram algebra)
+* ``auction``       — Bertsekas auction with LP-dual *admissible* lower bounds
+* ``search``        — device-resident frontier search (``lax.while_loop``)
+* ``api``           — ``ged_batch`` / ``verify_batch`` (+ shard_map wrappers)
+"""
+
+from repro.core.engine.tensor_graphs import GraphPairTensors, pack_pairs
+from repro.core.engine.search import EngineConfig
+from repro.core.engine.api import ged_batch, verify_batch
+
+__all__ = [
+    "GraphPairTensors",
+    "pack_pairs",
+    "EngineConfig",
+    "ged_batch",
+    "verify_batch",
+]

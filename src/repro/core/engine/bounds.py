@@ -1,0 +1,230 @@
+"""Batched anchor-aware bound components (histogram algebra).
+
+Everything here scores **all children of one search state at once** — the
+tensor formulation of the paper's Alg. 3 / Alg. 4.  Multiset edit distances
+become dense histogram operations:
+
+    Y(S1, S2) = max(|S1|, |S2|) - sum_l min(h1[l], h2[l])
+
+and the inner/cross partitions of the anchor-aware bounds become einsums of
+one-hot adjacency tensors against free-vertex masks.  Functions take a single
+pair + a single state and are ``vmap``-ed over the expansion batch and over
+pairs by the search loop.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import auction as auc
+from repro.kernels import ops as kops
+
+BIG = 1e7
+
+
+class PairConsts(NamedTuple):
+    """Static per-pair tensors, computed once outside the search loop."""
+
+    qv: jnp.ndarray        # (N,) int32
+    gv: jnp.ndarray        # (N,) int32
+    qa: jnp.ndarray        # (N, N) int32
+    ga: jnp.ndarray        # (N, N) int32
+    order: jnp.ndarray     # (N,) int32
+    n: jnp.ndarray         # () int32
+    oh_q: jnp.ndarray      # (Le, N, N) f32 one-hot edge labels
+    oh_g: jnp.ndarray      # (Le, N, N) f32
+    qa_ord: jnp.ndarray    # (N, N) int32 = qa[:, order] (cols by order position)
+    oh_q_ord: jnp.ndarray  # (N, Le, N) f32 = oh_q[:, order[j], :] by position j
+    n_vlabels: int
+    n_elabels: int
+
+
+def make_pair_consts(qv, gv, qa, ga, order, n, n_vlabels: int, n_elabels: int
+                     ) -> PairConsts:
+    le = n_elabels
+    labels = jnp.arange(1, le + 1, dtype=jnp.int32)
+    oh_q = (qa[None, :, :] == labels[:, None, None]).astype(jnp.float32)
+    oh_g = (ga[None, :, :] == labels[:, None, None]).astype(jnp.float32)
+    qa_ord = qa[:, order]
+    oh_q_ord = jnp.transpose(oh_q, (1, 0, 2))[order]  # (N, Le, N)
+    return PairConsts(qv, gv, qa, ga, order, n, oh_q, oh_g, qa_ord, oh_q_ord,
+                      n_vlabels, n_elabels)
+
+
+class StateMasks(NamedTuple):
+    vi: jnp.ndarray          # () int32 next q vertex
+    anchored_q: jnp.ndarray  # (N,) bool
+    used_g: jnp.ndarray      # (N,) bool
+    free_q: jnp.ndarray      # (N,) f32 (includes v_i)
+    free_q2: jnp.ndarray     # (N,) f32 (excludes v_i)
+    free_g: jnp.ndarray      # (N,) f32
+    img_cl: jnp.ndarray      # (N,) int32 img clamped to [0, N)
+    pos_anch: jnp.ndarray    # (N,) f32 1.0 where position j < level
+
+
+def state_masks(pc: PairConsts, img: jnp.ndarray, level: jnp.ndarray) -> StateMasks:
+    N = pc.qv.shape[0]
+    ids = jnp.arange(N, dtype=jnp.int32)
+    vmask = ids < pc.n
+    pos_anch = (ids < level)
+    vi = pc.order[jnp.minimum(level, pc.n - 1)]
+    anchored_q = jnp.zeros(N, dtype=bool).at[pc.order].set(pos_anch)
+    img_cl = jnp.clip(img, 0, N - 1)
+    used_g = jnp.any((img[None, :] == ids[:, None]) & pos_anch[None, :], axis=1)
+    free_q = (~anchored_q) & vmask
+    free_q2 = free_q & (ids != vi)
+    free_g = (~used_g) & vmask
+    return StateMasks(vi, anchored_q, used_g, free_q.astype(jnp.float32),
+                      free_q2.astype(jnp.float32), free_g.astype(jnp.float32),
+                      img_cl, pos_anch.astype(jnp.float32))
+
+
+def child_exact_delta(pc: PairConsts, sm: StateMasks) -> jnp.ndarray:
+    """Exact editorial-cost increment of (v_i -> u) for every u: (N,)."""
+    dv = (pc.qv[sm.vi] != pc.gv).astype(jnp.float32)
+    qrow = pc.qa_ord[sm.vi]                      # (N,) labels by position
+    grow = pc.ga[:, sm.img_cl]                   # (N u, N pos)
+    de = jnp.sum((qrow[None, :] != grow).astype(jnp.float32) * sm.pos_anch[None, :],
+                 axis=1)
+    return dv + de
+
+
+def lsa_children(pc: PairConsts, sm: StateMasks, level: jnp.ndarray,
+                 g_cost: jnp.ndarray) -> jnp.ndarray:
+    """delta^LSa(f u {v_i -> u}) for every u; +BIG where u is not free."""
+    N = pc.qv.shape[0]
+    lv_bins = pc.n_vlabels + 2
+
+    # ---- vertex component ---------------------------------------------------
+    voh_q = jax.nn.one_hot(pc.qv, lv_bins, dtype=jnp.float32)
+    voh_g = jax.nn.one_hot(pc.gv, lv_bins, dtype=jnp.float32)
+    hq_v = jnp.einsum("vl,v->l", voh_q, sm.free_q2)
+    hg_v = jnp.einsum("vl,v->l", voh_g, sm.free_g)
+    inter_v = jnp.sum(jnp.minimum(hq_v, hg_v))
+    max_v = (pc.n - level - 1).astype(jnp.float32)
+    # removing label gv[u] from the g side
+    surplus_u = (hg_v - hq_v)[pc.gv]             # (N,)
+    ups_v = max_v - (inter_v - (surplus_u <= 0).astype(jnp.float32))
+
+    # ---- inner edges --------------------------------------------------------
+    hq_i = 0.5 * jnp.einsum("lvw,v,w->l", pc.oh_q, sm.free_q2, sm.free_q2)
+    hg_i = 0.5 * jnp.einsum("lvw,v,w->l", pc.oh_g, sm.free_g, sm.free_g)
+    rowhist_g = jnp.einsum("luw,w->ul", pc.oh_g, sm.free_g)  # (N, Le)
+    hg_i_u = hg_i[None, :] - rowhist_g                        # (N u, Le)
+    n_i1 = jnp.sum(hq_i)
+    n_i2 = jnp.sum(hg_i_u, axis=1)
+    inter_i = jnp.sum(jnp.minimum(hq_i[None, :], hg_i_u), axis=1)
+    ups_i = jnp.maximum(n_i1, n_i2) - inter_i
+
+    # ---- old-anchor cross components ---------------------------------------
+    cq = jnp.einsum("jlw,w->jl", pc.oh_q_ord, sm.free_q2)     # (N pos, Le)
+    oh_g_img = jnp.transpose(pc.oh_g, (1, 0, 2))[sm.img_cl]   # (N pos, Le, N)
+    cg = jnp.einsum("jlw,w->jl", oh_g_img, sm.free_g)         # (N pos, Le)
+    s1 = jnp.sum(cq, axis=1)
+    s2 = jnp.sum(cg, axis=1)
+    inter_j = jnp.sum(jnp.minimum(cq, cg), axis=1)
+    base_j = jnp.maximum(s1, s2) - inter_j                    # (N pos,)
+    a_ju = pc.ga[sm.img_cl]                                   # (N pos, N u)
+    le = pc.n_elabels
+    aoh = (a_ju[:, :, None] == jnp.arange(1, le + 1, dtype=jnp.int32)).astype(
+        jnp.float32)                                           # (pos, u, Le)
+    cg_at = jnp.einsum("jul,jl->ju", aoh, cg)
+    cq_at = jnp.einsum("jul,jl->ju", aoh, cq)
+    d_ju = (cg_at <= cq_at).astype(jnp.float32)
+    adj_j = jnp.maximum(s1[:, None], s2[:, None] - 1.0) - (inter_j[:, None] - d_ju)
+    ups_ju = jnp.where(a_ju > 0, adj_j, base_j[:, None])      # (pos, u)
+    cross_sum = jnp.einsum("ju,j->u", ups_ju, sm.pos_anch)
+
+    # ---- v_i's own cross component ------------------------------------------
+    cq_vi = jnp.einsum("lw,w->l", pc.oh_q[:, sm.vi, :], sm.free_q2)  # (Le,)
+    s1_vi = jnp.sum(cq_vi)
+    s2_u = jnp.sum(rowhist_g, axis=1)
+    inter_vi = jnp.sum(jnp.minimum(cq_vi[None, :], rowhist_g), axis=1)
+    ups_vi = jnp.maximum(s1_vi, s2_u) - inter_vi
+
+    delta = child_exact_delta(pc, sm)
+    lb = g_cost + delta + ups_v + ups_i + cross_sum + ups_vi
+    return jnp.where(sm.free_g > 0, lb, BIG)
+
+
+def bma_cost_matrix(pc: PairConsts, sm: StateMasks, use_kernel: bool = True
+                    ) -> jnp.ndarray:
+    """lambda^BMa over all (v, u) with dummy structure for non-free slots.
+
+    Dummy rows (anchored / PAD q-slots) pair with dummy columns at cost 0 and
+    with free columns at BIG, so the NxN optimum equals the free-free optimum.
+    """
+    inner_q = jnp.einsum("lvw,w->vl", pc.oh_q, sm.free_q)    # (N, Le)
+    inner_g = jnp.einsum("luw,w->ul", pc.oh_g, sm.free_g)
+    if use_kernel:
+        lam_free = kops.bma_cost_matrix(
+            pc.qv, pc.gv, inner_q, inner_g,
+            pc.qa_ord, pc.ga, sm.img_cl, sm.pos_anch,
+        )
+    else:
+        sq = jnp.sum(inner_q, axis=1)
+        sg = jnp.sum(inner_g, axis=1)
+        inter = jnp.sum(
+            jnp.minimum(inner_q[:, None, :], inner_g[None, :, :]), axis=2
+        )
+        ups = jnp.maximum(sq[:, None], sg[None, :]) - inter
+        qcross = pc.qa_ord                                    # (N v, N pos)
+        gcross = pc.ga[:, sm.img_cl]                          # (N u, N pos)
+        mism = jnp.einsum(
+            "vuj,j->vu",
+            (qcross[:, None, :] != gcross[None, :, :]).astype(jnp.float32),
+            sm.pos_anch,
+        )
+        vmis = (pc.qv[:, None] != pc.gv[None, :]).astype(jnp.float32)
+        lam_free = vmis + 0.5 * ups + mism
+
+    fq = sm.free_q[:, None] > 0
+    fg = sm.free_g[None, :] > 0
+    return jnp.where(fq & fg, lam_free, jnp.where(fq == fg, 0.0, BIG))
+
+
+class BmaChildren(NamedTuple):
+    lb: jnp.ndarray            # (N,) forced dual bounds (+BIG where not free)
+    full_img: jnp.ndarray      # (N,) heuristic full mapping by order position
+    full_cost: jnp.ndarray     # () editorial cost of the heuristic mapping
+
+
+def editorial_cost_tensor(pc: PairConsts, fmap: jnp.ndarray) -> jnp.ndarray:
+    """Exact editorial cost of a full mapping given *by vertex* (N,)."""
+    N = pc.qv.shape[0]
+    ids = jnp.arange(N, dtype=jnp.int32)
+    vmask = (ids < pc.n).astype(jnp.float32)
+    vterm = jnp.sum((pc.qv != pc.gv[fmap]).astype(jnp.float32) * vmask)
+    gmap = pc.ga[fmap][:, fmap]
+    pairm = vmask[:, None] * vmask[None, :]
+    upper = (ids[:, None] < ids[None, :]).astype(jnp.float32)
+    eterm = jnp.sum((pc.qa != gmap).astype(jnp.float32) * pairm * upper)
+    return vterm + eterm
+
+
+def bma_children(pc: PairConsts, sm: StateMasks, img: jnp.ndarray,
+                 level: jnp.ndarray, g_cost: jnp.ndarray, sweeps: int,
+                 use_kernel: bool = True) -> BmaChildren:
+    """Alg. 3 on TPU: one auction, dual forced bounds for every child."""
+    N = pc.qv.shape[0]
+    lam = bma_cost_matrix(pc, sm, use_kernel=use_kernel)
+    st = auc.run_auction(lam, sweeps)
+    forced = auc.forced_dual_bounds(lam, st.prices, sm.vi)
+    lb = g_cost + jnp.maximum(forced, 0.0)
+    lb = jnp.where(sm.free_g > 0, lb, BIG)
+
+    # Heuristic full mapping (paper §4.2 remark): greedy primal completion.
+    assign = auc.greedy_primal(lam, st.prices)           # (N,) col per row v
+    pos = jnp.arange(N, dtype=jnp.int32)
+    img_full = jnp.where(pos < level, img, assign[pc.order])
+    fmap = jnp.zeros(N, dtype=jnp.int32).at[pc.order].set(img_full)
+    full_cost = editorial_cost_tensor(pc, fmap)
+    # Defence in depth: a mapping sending a real vertex to a PAD slot is not
+    # a valid editorial script — poison its cost so it can never become the
+    # incumbent upper bound.
+    invalid = jnp.any((fmap >= pc.n) & (pos < pc.n))
+    full_cost = full_cost + invalid.astype(jnp.float32) * BIG
+    return BmaChildren(lb, img_full, full_cost)

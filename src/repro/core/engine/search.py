@@ -1,0 +1,256 @@
+"""Device-resident frontier search (the tensorised Alg. 2).
+
+One ``lax.while_loop`` per pair (``vmap``-ed across pairs) owns a fixed
+capacity pool of search states.  Per iteration:
+
+  1. **pop**: ``top_k`` the ``expand`` best states by the strategy key
+     (AStar+: ``(lb, -level)``; DFS+: ``(-level, lb)`` — the paper's pop rule
+     as a scalar key).
+  2. **expand**: score all children of each popped state at once (LSa via
+     histogram algebra, BMa via one auction + dual forced bounds — Alg. 3/4).
+  3. **bound**: update the incumbent from (a) exact leaf children and (b) the
+     greedy-primal full-mapping extension (Alg. 2 line 13).
+  4. **merge**: keep the best ``pool`` states; remember the smallest lower
+     bound ever dropped — the result is certified **exact** iff the final
+     answer is <= that floor (it is, for paper-scale inputs; overflowing
+     pairs are re-queued to the exact host solver by the serving layer).
+
+Verification mode initialises the incumbent to ``tau + 0.5`` and stops early
+on accept (incumbent <= tau) or reject (pool min lb > tau) — paper §5.3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import bounds as eb
+from repro.core.engine.tensor_graphs import GraphPairTensors
+from repro.parallel.ops import top_k_sorted
+
+INF = 3.0e8
+BIG = eb.BIG
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    pool: int = 1024          # state-pool capacity P
+    expand: int = 8           # states expanded per iteration B
+    max_iters: int = 512
+    sweeps: int = 8           # auction sweeps per expansion
+    bound: str = "hybrid"     # "lsa" | "bma" | "hybrid" (max of both)
+    strategy: str = "astar"   # "astar" | "dfs"
+    use_kernel: bool = True   # Pallas kernels on the hot path
+
+
+class PoolState(NamedTuple):
+    img: jnp.ndarray       # (P, N) int32 images by order position (-1 = unset)
+    level: jnp.ndarray     # (P,) int32
+    gcost: jnp.ndarray     # (P,) f32
+    lb: jnp.ndarray        # (P,) f32
+    valid: jnp.ndarray     # (P,) bool
+
+
+class Carry(NamedTuple):
+    pool: PoolState
+    ub: jnp.ndarray          # () f32 incumbent
+    best_img: jnp.ndarray    # (N,) int32 incumbent mapping (by position)
+    floor: jnp.ndarray       # () f32 min lower bound ever dropped
+    it: jnp.ndarray          # () int32
+    expanded: jnp.ndarray    # () int32 total states expanded
+    done: jnp.ndarray        # () bool
+
+
+def _pop_key(cfg: EngineConfig, lb, level, valid, n):
+    if cfg.strategy == "astar":
+        key = lb * 256.0 + (n.astype(jnp.float32) - level.astype(jnp.float32))
+    else:  # dfs: deepest first, then smallest bound
+        key = (n.astype(jnp.float32) - level.astype(jnp.float32)) * 1.0e5 + lb
+    return jnp.where(valid, key, INF)
+
+
+def _expand_one(pc: eb.PairConsts, cfg: EngineConfig, img, level, gcost,
+                state_valid):
+    """Score all children of one state.  Returns per-child arrays (N,)."""
+    sm = eb.state_masks(pc, img, level)
+    delta = eb.child_exact_delta(pc, sm)
+    child_gcost = gcost + delta
+
+    lb_parts = []
+    if cfg.bound in ("lsa", "hybrid"):
+        lb_parts.append(eb.lsa_children(pc, sm, level, gcost))
+    if cfg.bound in ("bma", "hybrid"):
+        bma = eb.bma_children(pc, sm, img, level, gcost, cfg.sweeps,
+                              use_kernel=cfg.use_kernel)
+        lb_parts.append(bma.lb)
+        heur_img, heur_cost = bma.full_img, bma.full_cost
+    else:
+        heur_img = img
+        heur_cost = jnp.float32(INF)
+    lb = lb_parts[0]
+    for p in lb_parts[1:]:
+        lb = jnp.maximum(lb, p)
+
+    free = sm.free_g > 0
+    ok = free & state_valid
+    lb = jnp.where(ok, lb, INF)
+    child_gcost = jnp.where(ok, child_gcost, INF)
+    heur_cost = jnp.where(state_valid, heur_cost, INF)
+    return lb, child_gcost, heur_img, heur_cost
+
+
+def run_pair(pair: Tuple, cfg: EngineConfig, tau: jnp.ndarray,
+             verification: bool):
+    """Search one pair.  ``pair`` = (qv, gv, qa, ga, order, n) jnp arrays."""
+    qv, gv, qa, ga, order, n, n_vlabels, n_elabels = pair
+    N = qv.shape[0]
+    P, B = cfg.pool, cfg.expand
+    pc = eb.make_pair_consts(qv, gv, qa, ga, order, n, n_vlabels, n_elabels)
+
+    nf = n.astype(jnp.float32)
+
+    pool0 = PoolState(
+        img=jnp.full((P, N), -1, dtype=jnp.int32),
+        level=jnp.zeros((P,), dtype=jnp.int32),
+        gcost=jnp.full((P,), INF, dtype=jnp.float32).at[0].set(0.0),
+        lb=jnp.full((P,), INF, dtype=jnp.float32).at[0].set(0.0),
+        valid=jnp.zeros((P,), dtype=bool).at[0].set(True),
+    )
+    ub0 = (tau + 0.5).astype(jnp.float32) if verification else jnp.float32(INF)
+    carry0 = Carry(pool0, ub0, jnp.full((N,), -1, jnp.int32),
+                   jnp.float32(INF), jnp.int32(0), jnp.int32(0),
+                   jnp.asarray(n == 0))
+
+    expand_v = jax.vmap(
+        lambda img, lvl, gc, sv: _expand_one(pc, cfg, img, lvl, gc, sv)
+    )
+
+    def cond(c: Carry):
+        return ~c.done
+
+    def body(c: Carry) -> Carry:
+        pool = c.pool
+        keys = _pop_key(cfg, pool.lb, pool.level, pool.valid, n)
+        # sort-based top-k: lax.top_k is an SPMD-opaque custom-call that
+        # all-gathers the vmapped pair batch (see parallel/ops.py)
+        neg_top, idx = top_k_sorted(-keys, B)                # best B states
+        sel_valid = (-neg_top) < INF / 2
+        sel_img = pool.img[idx]
+        sel_level = pool.level[idx]
+        sel_gcost = pool.gcost[idx]
+        sel_lb = pool.lb[idx]
+        # prune-at-pop (Alg. 2 line 6)
+        sel_valid = sel_valid & (sel_lb < c.ub)
+
+        # invalidate popped slots
+        popped = jnp.zeros((P,), bool).at[idx].set(sel_valid | ((-neg_top) < INF / 2))
+        pool = pool._replace(valid=pool.valid & ~popped,
+                             lb=jnp.where(popped, INF, pool.lb))
+
+        # ---- expand ---------------------------------------------------------
+        clb, cgc, heur_img, heur_cost = expand_v(
+            sel_img, sel_level, sel_gcost, sel_valid
+        )                                                     # (B, N) each
+        # monotone bounds along root-leaf paths (§5.1)
+        clb = jnp.maximum(clb, sel_lb[:, None])
+        child_level = sel_level + 1                           # (B,)
+        is_leaf = (child_level[:, None] == n)                 # (B, N)
+
+        # ---- incumbent update ----------------------------------------------
+        leaf_costs = jnp.where(is_leaf & (cgc < INF / 2), cgc, INF)
+        l_flat = leaf_costs.reshape(-1)
+        l_best = jnp.argmin(l_flat)
+        l_cost = l_flat[l_best]
+        lb_state, lu = l_best // N, l_best % N
+        pos = jnp.arange(N, dtype=jnp.int32)
+        leaf_img = jnp.where(pos == sel_level[lb_state], lu,
+                             sel_img[lb_state])
+
+        h_best = jnp.argmin(heur_cost)
+        h_cost = heur_cost[h_best]
+
+        new_ub = jnp.minimum(c.ub, jnp.minimum(l_cost, h_cost))
+        best_img = jnp.where(
+            (l_cost < c.ub) & (l_cost <= h_cost), leaf_img,
+            jnp.where(h_cost < c.ub, heur_img[h_best], c.best_img),
+        )
+
+        # ---- children to insert ---------------------------------------------
+        ins_mask = (~is_leaf) & (clb < new_ub) & (clb < INF / 2)
+        child_imgs = jnp.where(
+            pos[None, None, :] == sel_level[:, None, None],
+            jnp.broadcast_to(pos[None, :, None], (B, N, N)),
+            sel_img[:, None, :],
+        )                                                      # (B, N, N)
+        ch_img = child_imgs.reshape(B * N, N)
+        ch_level = jnp.broadcast_to(child_level[:, None], (B, N)).reshape(-1)
+        ch_gcost = cgc.reshape(-1)
+        ch_lb = jnp.where(ins_mask, clb, INF).reshape(-1)
+        ch_valid = ins_mask.reshape(-1)
+
+        # ---- merge: keep best P by pop key ----------------------------------
+        all_img = jnp.concatenate([pool.img, ch_img], axis=0)
+        all_level = jnp.concatenate([pool.level, ch_level])
+        all_gcost = jnp.concatenate([pool.gcost, ch_gcost])
+        all_lb = jnp.concatenate([pool.lb, ch_lb])
+        all_valid = jnp.concatenate([pool.valid & (pool.lb < new_ub), ch_valid])
+        all_keys = _pop_key(cfg, all_lb, all_level, all_valid, n)
+        order_idx = jnp.argsort(all_keys)
+        keep = order_idx[:P]
+        drop = order_idx[P:]
+        new_pool = PoolState(all_img[keep], all_level[keep], all_gcost[keep],
+                             jnp.where(all_valid[keep], all_lb[keep], INF),
+                             all_valid[keep])
+        dropped_lbs = jnp.where(all_valid[drop], all_lb[drop], INF)
+        new_floor = jnp.minimum(c.floor, jnp.min(dropped_lbs))
+
+        # ---- termination -----------------------------------------------------
+        min_lb = jnp.min(jnp.where(new_pool.valid, new_pool.lb, INF))
+        it = c.it + 1
+        exhausted = min_lb >= INF / 2
+        if cfg.strategy == "astar":
+            opt_done = min_lb >= new_ub
+        else:
+            opt_done = exhausted
+        done = exhausted | opt_done | (it >= cfg.max_iters)
+        if verification:
+            done = done | (new_ub <= tau) | (jnp.minimum(min_lb, new_floor) > tau)
+
+        new_c = Carry(new_pool, new_ub, best_img, new_floor, it,
+                      c.expanded + jnp.sum(sel_valid.astype(jnp.int32)), done)
+        # mask the whole carry when already done (vmap lockstep safety)
+        return jax.tree.map(
+            lambda new, old: jnp.where(c.done, old, new), new_c, c
+        )
+
+    final = jax.lax.while_loop(cond, body, carry0)
+
+    min_lb_end = jnp.min(jnp.where(final.pool.valid, final.pool.lb, INF))
+    truncated = (final.it >= cfg.max_iters) & (min_lb_end < final.ub)
+    ged_val = final.ub
+    exact = (ged_val <= final.floor) & ~truncated
+    if verification:
+        similar = final.ub <= tau
+        exact = jnp.where(
+            similar, jnp.asarray(True),
+            (jnp.minimum(min_lb_end, final.floor) > tau) & ~truncated,
+        )
+        return {
+            "similar": similar,
+            "exact": exact,
+            "upper_bound": final.ub,
+            "iterations": final.it,
+            "expanded": final.expanded,
+            "best_img": final.best_img,
+        }
+    return {
+        "ged": ged_val,
+        "exact": exact,
+        "iterations": final.it,
+        "expanded": final.expanded,
+        "best_img": final.best_img,
+        "floor": final.floor,
+    }

@@ -1,0 +1,102 @@
+"""Dense padded tensor representation of (q, g) pairs.
+
+Label conventions (compact, per *batch*):
+* vertex labels ``0 .. Lv-1`` are real, ``Lv`` is the BOTTOM padding label
+  (paper's ``_|_``), ``Lv+1`` marks PAD slots (non-vertices beyond ``n``).
+* edge labels ``1 .. Le`` real, ``0`` = no edge.  PAD slots have no edges.
+
+All pairs in a batch share the static size ``N`` (max vertices) and the label
+vocabularies ``Lv`` / ``Le``; the per-pair true size ``n`` is data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.exact.graph import BOTTOM, Graph, pad_pair
+from repro.core.exact.order import matching_order
+
+
+@dataclasses.dataclass
+class GraphPairTensors:
+    """A batch of B graph pairs, padded to N slots."""
+
+    qv: np.ndarray      # (B, N) int32 vertex labels of q (compact)
+    gv: np.ndarray      # (B, N) int32 vertex labels of g
+    qa: np.ndarray      # (B, N, N) int32 edge labels of q (0 = absent)
+    ga: np.ndarray      # (B, N, N) int32 edge labels of g
+    order: np.ndarray   # (B, N) int32 matching order of q (PAD slots at end)
+    n: np.ndarray       # (B,) int32 true vertex count per pair
+    n_vlabels: int      # Lv (real labels); BOTTOM = Lv, PAD = Lv + 1
+    n_elabels: int      # Le (real labels); absent = 0
+
+    @property
+    def batch(self) -> int:
+        return self.qv.shape[0]
+
+    @property
+    def slots(self) -> int:
+        return self.qv.shape[1]
+
+    def pair(self, i: int) -> "GraphPairTensors":
+        return GraphPairTensors(
+            self.qv[i : i + 1], self.gv[i : i + 1], self.qa[i : i + 1],
+            self.ga[i : i + 1], self.order[i : i + 1], self.n[i : i + 1],
+            self.n_vlabels, self.n_elabels,
+        )
+
+
+def pack_pairs(
+    pairs: Sequence[Tuple[Graph, Graph]],
+    slots: int | None = None,
+) -> GraphPairTensors:
+    """Pad, relabel and stack a list of (q, g) pairs into batch tensors."""
+    padded: List[Tuple[Graph, Graph]] = []
+    for q, g in pairs:
+        qp, gp, _ = pad_pair(q, g)
+        padded.append((qp, gp))
+
+    # Joint compact label maps across the batch.
+    vset = sorted(
+        {int(a) for qp, gp in padded for a in qp.vlabels if a != BOTTOM}
+        | {int(a) for qp, gp in padded for a in gp.vlabels if a != BOTTOM}
+    )
+    eset = sorted(
+        {int(a) for qp, gp in padded for a in np.unique(qp.adj) if a != 0}
+        | {int(a) for qp, gp in padded for a in np.unique(gp.adj) if a != 0}
+    )
+    vmap = {a: i for i, a in enumerate(vset)}
+    emap = {a: i + 1 for i, a in enumerate(eset)}
+    emap[0] = 0
+    lv, le = len(vset), len(eset)
+    bottom, pad = lv, lv + 1
+
+    nmax = max(gp.n for _, gp in padded)
+    if slots is None:
+        slots = max(4, int(2 ** np.ceil(np.log2(max(nmax, 1)))))
+    if nmax > slots:
+        raise ValueError(f"pair with {nmax} vertices does not fit {slots} slots")
+
+    B = len(padded)
+    qv = np.full((B, slots), pad, dtype=np.int32)
+    gv = np.full((B, slots), pad, dtype=np.int32)
+    qa = np.zeros((B, slots, slots), dtype=np.int32)
+    ga = np.zeros((B, slots, slots), dtype=np.int32)
+    order = np.zeros((B, slots), dtype=np.int32)
+    ns = np.zeros((B,), dtype=np.int32)
+
+    for b, (qp, gp) in enumerate(padded):
+        n = gp.n
+        ns[b] = n
+        qv[b, :n] = [bottom if int(a) == BOTTOM else vmap[int(a)] for a in qp.vlabels]
+        gv[b, :n] = [bottom if int(a) == BOTTOM else vmap[int(a)] for a in gp.vlabels]
+        qa[b, :n, :n] = np.vectorize(lambda a: emap[int(a)])(qp.adj)
+        ga[b, :n, :n] = np.vectorize(lambda a: emap[int(a)])(gp.adj)
+        ordv = matching_order(qp, gp)
+        order[b, :n] = ordv
+        order[b, n:] = np.arange(n, slots)  # PAD positions map to themselves
+
+    return GraphPairTensors(qv, gv, qa, ga, order, ns, lv, le)

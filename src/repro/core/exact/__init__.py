@@ -1,0 +1,36 @@
+"""Paper-faithful exact GED algorithms (Chang et al., 2017).
+
+This subpackage is the reference implementation of the paper:
+  - ``graph``      : labeled undirected graphs, padding simplifications (§2.1)
+  - ``multiset``   : multiset edit distance ``Y`` (App. A.2)
+  - ``assignment`` : exact Hungarian (Jonker-Volgenant style) + forced variants
+  - ``bounds``     : LS / LSa / BM / BMa / BMaN / SM / SMa child scoring (§4, A.3)
+  - ``order``      : frequency-aware connected matching order (App. A.1)
+  - ``search``     : unified framework (Alg. 2) -> AStar+ / DFS+ (§3, §5)
+  - ``brute``      : brute-force oracle for tests
+
+Everything here is plain python/numpy and serves both as the paper-faithful
+baseline recorded in EXPERIMENTS.md and as the oracle for the batched JAX
+engine in ``repro.core.engine``.
+"""
+
+from repro.core.exact.graph import Graph, BOTTOM, pad_pair, editorial_cost
+from repro.core.exact.multiset import multiset_edit_distance
+from repro.core.exact.assignment import hungarian, solve_forced_all
+from repro.core.exact.order import matching_order
+from repro.core.exact.search import ged, ged_verify, SearchResult, BOUNDS
+
+__all__ = [
+    "Graph",
+    "BOTTOM",
+    "pad_pair",
+    "editorial_cost",
+    "multiset_edit_distance",
+    "hungarian",
+    "solve_forced_all",
+    "matching_order",
+    "ged",
+    "ged_verify",
+    "SearchResult",
+    "BOUNDS",
+]

@@ -1,0 +1,16 @@
+from repro.data.graphs import (
+    random_graph,
+    perturb,
+    graph_pair_groups,
+    aids_like_graph,
+)
+from repro.data.tokens import synthetic_token_batches, TokenPipeline
+
+__all__ = [
+    "random_graph",
+    "perturb",
+    "graph_pair_groups",
+    "aids_like_graph",
+    "synthetic_token_batches",
+    "TokenPipeline",
+]

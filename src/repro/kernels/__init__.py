@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the batched GED engine (validated in interpret mode
+on CPU; see ref.py for the pure-jnp oracles and tests/test_kernels.py for the
+shape/dtype sweeps)."""

@@ -1,0 +1,102 @@
+"""Pallas kernel: fused lambda^BMa branch-cost matrix (B, N, N).
+
+The hottest op of the batched GED engine: for every expanded search state the
+engine needs the full pairwise branch-edit cost matrix
+
+    lam[v, u] = 1[l(v) != l(u)]
+                + 1/2 * Y(inner-edge hists of v and u)
+                + sum_{anchored j} 1[qa[v, order_j] != ga[u, img_j]]
+
+Unfused, this is three (N, N)-shaped intermediates (vertex mismatch, pairwise
+histogram Y, anchor mismatch counts) each round-tripping HBM.  The kernel
+tiles (v, u) into VMEM blocks and accumulates the label- and anchor-
+reductions with on-chip loops, writing ``lam`` once.
+
+TPU mapping notes (DESIGN.md §2): the (TV, TU) tile is VPU-aligned (lanes =
+128 on the u axis, sublanes on v); reductions over ``Le`` (edge labels) and
+``N`` (anchor positions) are unrolled ``fori_loop``s over VMEM-resident
+slices, so the working set is O(TV*N + TU*N) int32 + O(TV*TU) f32 per step —
+about 200 KiB at N=128, comfortably inside the ~16 MiB VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(qv_ref, gv_ref, iq_ref, ig_ref, qa_ref, gc_ref, pa_ref, out_ref):
+    # Tile shapes: qv (1, TV), gv (1, TU), iq (1, TV, Le), ig (1, TU, Le),
+    # qa (1, TV, N), gc (1, TU, N), pa (1, N) -> out (1, TV, TU).
+    qv = qv_ref[0]            # (TV,)
+    gv = gv_ref[0]            # (TU,)
+    iq = iq_ref[0]            # (TV, Le)
+    ig = ig_ref[0]            # (TU, Le)
+    qa = qa_ref[0]            # (TV, N)
+    gc = gc_ref[0]            # (TU, N)
+    pa = pa_ref[0]            # (N,)
+
+    tv, le = iq.shape
+    tu = ig.shape[0]
+    n = qa.shape[1]
+
+    vmis = (qv[:, None] != gv[None, :]).astype(jnp.float32)
+
+    sq = jnp.sum(iq, axis=1)  # (TV,)
+    sg = jnp.sum(ig, axis=1)  # (TU,)
+
+    def label_body(l, acc):
+        return acc + jnp.minimum(iq[:, l][:, None], ig[:, l][None, :])
+
+    inter = jax.lax.fori_loop(0, le, label_body,
+                              jnp.zeros((tv, tu), dtype=jnp.float32))
+    ups = jnp.maximum(sq[:, None], sg[None, :]) - inter
+
+    def anchor_body(j, acc):
+        mism = (qa[:, j][:, None] != gc[:, j][None, :]).astype(jnp.float32)
+        return acc + mism * pa[j]
+
+    mism = jax.lax.fori_loop(0, n, anchor_body,
+                             jnp.zeros((tv, tu), dtype=jnp.float32))
+
+    out_ref[0] = vmis + 0.5 * ups + mism
+
+
+@functools.partial(jax.jit, static_argnames=("tile_v", "tile_u", "interpret"))
+def bma_cost_matrix_pallas(
+    qv: jnp.ndarray,        # (B, N) int32
+    gv: jnp.ndarray,        # (B, N) int32
+    inner_q: jnp.ndarray,   # (B, N, Le) f32
+    inner_g: jnp.ndarray,   # (B, N, Le) f32
+    qa_ord: jnp.ndarray,    # (B, N, N) int32
+    gcross: jnp.ndarray,    # (B, N, N) int32
+    pos_anch: jnp.ndarray,  # (B, N) f32
+    tile_v: int = 0,
+    tile_u: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, n = qv.shape
+    le = inner_q.shape[-1]
+    tv = tile_v or min(n, 128)
+    tu = tile_u or min(n, 128)
+    assert n % tv == 0 and n % tu == 0, (n, tv, tu)
+    grid = (b, n // tv, n // tu)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tv), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, tu), lambda b, i, j: (b, j)),
+            pl.BlockSpec((1, tv, le), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tu, le), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tv, n), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tu, n), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, n), lambda b, i, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tv, tu), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n, n), jnp.float32),
+        interpret=interpret,
+    )(qv, gv, inner_q, inner_g, qa_ord, gcross, pos_anch)

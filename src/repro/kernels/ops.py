@@ -1,0 +1,68 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels execute in ``interpret=True`` mode; on TPU
+they compile to Mosaic.  Every wrapper accepts unbatched operands as well —
+the engine calls them inside nested ``vmap``s, and ``pallas_call`` batches by
+prepending grid dimensions.
+
+Set ``REPRO_DISABLE_PALLAS=1`` to force the pure-jnp reference path
+(used by the dry-run lowering, where interpret-mode pallas would obscure the
+HLO cost analysis on CPU).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bma_cost_matrix import bma_cost_matrix_pallas
+from repro.kernels.reduced_top2 import reduced_top2_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _disabled() -> bool:
+    return os.environ.get("REPRO_DISABLE_PALLAS", "0") == "1"
+
+
+def bma_cost_matrix(qv, gv, inner_q, inner_g, qa_ord, ga, img_cl, pos_anch):
+    """lambda^BMa free-pair cost matrix; operands may be batched or not.
+
+    ``ga`` is gathered at ``img_cl`` here (cheap XLA gather) so the kernel
+    body stays gather-free.
+    """
+    unbatched = qv.ndim == 1
+    if unbatched:
+        qv, gv, inner_q, inner_g, qa_ord, ga, img_cl, pos_anch = (
+            x[None] for x in (qv, gv, inner_q, inner_g, qa_ord, ga, img_cl,
+                              pos_anch))
+    n = qv.shape[-1]
+    # gcross[b, u, j] = ga[b, u, img_cl[b, j]]  (cheap XLA gather)
+    gcross = jnp.take_along_axis(
+        ga, jnp.broadcast_to(img_cl[:, None, :], ga.shape), axis=2
+    )
+    args = [qv, gv, inner_q, inner_g, qa_ord, gcross, pos_anch]
+    if _disabled():
+        out = ref.bma_cost_matrix_ref(*args)
+    else:
+        out = bma_cost_matrix_pallas(*args, interpret=_interpret())
+    return out[0] if unbatched else out
+
+
+def reduced_top2(cost, prices):
+    """(min, argmin, 2nd-min) per row of ``cost + prices``."""
+    unbatched = cost.ndim == 2
+    if unbatched:
+        cost, prices = cost[None], prices[None]
+    if _disabled():
+        m1, a1, m2 = ref.reduced_top2_ref(cost, prices)
+    else:
+        m1, a1, m2 = reduced_top2_pallas(cost, prices, interpret=_interpret())
+    if unbatched:
+        return m1[0], a1[0], m2[0]
+    return m1, a1, m2

@@ -1,0 +1,67 @@
+"""Pallas kernel: per-row (min, argmin, second-min) of ``cost + prices``.
+
+The inner op of both the auction sweep (bid computation) and the forced
+dual bounds (minor row minima).  Fusing the price broadcast with the double
+reduction avoids materialising the reduced (B, N, N) matrix in HBM twice.
+
+Tiling: rows (bidders) tiled to ``TR`` sublanes; the full column axis (N <=
+512) stays resident in VMEM lanes, so each grid step is one VMEM-local
+top-2 reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e7
+
+
+def _kernel(cost_ref, prices_ref, m1_ref, a1_ref, m2_ref):
+    cost = cost_ref[0]          # (TR, N)
+    prices = prices_ref[0]      # (N,)
+    red = cost + prices[None, :]
+    m1 = jnp.min(red, axis=1)
+    a1 = jnp.argmin(red, axis=1).astype(jnp.int32)
+    n = red.shape[1]
+    onehot = (jnp.arange(n, dtype=jnp.int32)[None, :] == a1[:, None])
+    m2 = jnp.min(red + onehot.astype(red.dtype) * BIG, axis=1)
+    m1_ref[0] = m1
+    a1_ref[0] = a1
+    m2_ref[0] = m2
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "interpret"))
+def reduced_top2_pallas(
+    cost: jnp.ndarray,      # (B, N, N) f32
+    prices: jnp.ndarray,    # (B, N) f32
+    tile_r: int = 0,
+    interpret: bool = False,
+):
+    b, n, _ = cost.shape
+    tr = tile_r or min(n, 128)
+    assert n % tr == 0
+    grid = (b, n // tr)
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+        jax.ShapeDtypeStruct((b, n), jnp.int32),
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tr, n), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, n), lambda b, i: (b, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, tr), lambda b, i: (b, i)),
+            pl.BlockSpec((1, tr), lambda b, i: (b, i)),
+            pl.BlockSpec((1, tr), lambda b, i: (b, i)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(cost, prices)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: each kernel's tests sweep shapes/dtypes
+and assert_allclose against these functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1e7
+
+
+def bma_cost_matrix_ref(
+    qv: jnp.ndarray,        # (B, N) int32
+    gv: jnp.ndarray,        # (B, N) int32
+    inner_q: jnp.ndarray,   # (B, N, Le) f32 — free-inner edge-label histograms
+    inner_g: jnp.ndarray,   # (B, N, Le) f32
+    qa_ord: jnp.ndarray,    # (B, N, N) int32 — q adjacency, cols by order position
+    gcross: jnp.ndarray,    # (B, N, N) int32 — g adjacency gathered at images
+    pos_anch: jnp.ndarray,  # (B, N) f32 — 1.0 where position j is anchored
+) -> jnp.ndarray:
+    """lambda^BMa(v, u) for all free-slot pairs (B, N, N).
+
+    = 1[l(v) != l(u)]
+      + 1/2 * ( max(|E_I(v)|, |E_I(u)|) - sum_l min(h_v[l], h_u[l]) )
+      + sum_{anchored j} 1[ qa[v, order_j] != ga[u, img_j] ]
+    """
+    vmis = (qv[:, :, None] != gv[:, None, :]).astype(jnp.float32)
+    sq = jnp.sum(inner_q, axis=2)
+    sg = jnp.sum(inner_g, axis=2)
+    inter = jnp.sum(
+        jnp.minimum(inner_q[:, :, None, :], inner_g[:, None, :, :]), axis=3
+    )
+    ups = jnp.maximum(sq[:, :, None], sg[:, None, :]) - inter
+    mism = jnp.einsum(
+        "bvuj,bj->bvu",
+        (qa_ord[:, :, None, :] != gcross[:, None, :, :]).astype(jnp.float32),
+        pos_anch,
+    )
+    return vmis + 0.5 * ups + mism
+
+
+def reduced_top2_ref(cost: jnp.ndarray, prices: jnp.ndarray):
+    """Per-row (min, argmin, second-min) of ``cost + prices`` (B, N, N)->(B, N)x3."""
+    red = cost + prices[:, None, :]
+    m1 = jnp.min(red, axis=-1)
+    a1 = jnp.argmin(red, axis=-1).astype(jnp.int32)
+    masked = red + jax.nn.one_hot(a1, red.shape[-1], dtype=red.dtype) * BIG
+    m2 = jnp.min(masked, axis=-1)
+    return m1, a1, m2
+
+
+def hist_intersect_ref(hq: jnp.ndarray, hg: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise histogram-intersection sizes: (B, Nq, L) x (B, Nu, L) -> (B, Nq, Nu)."""
+    return jnp.sum(jnp.minimum(hq[:, :, None, :], hg[:, None, :, :]), axis=3)

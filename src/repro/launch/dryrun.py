@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Pure-jnp kernel path for lowering: interpret-mode pallas_call unrolls its
+# grid as a while loop of batch-dim dynamic-slices, which the SPMD
+# partitioner can only handle by all-gathering the pair batch (measured:
+# 494 TB/device fake traffic on ged-verify).  On TPU the Mosaic kernel is
+# used; on the CPU dry-run the reference path shows XLA the real math.
+os.environ["REPRO_DISABLE_PALLAS"] = "1"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run before ANY other import (jax locks the device count
+on first init).  512 placeholder host devices back the production meshes:
+(16, 16) single-pod and (2, 16, 16) multi-pod.
+
+Per cell this launcher
+  1. builds the sharded step via ``launch/steps.py`` from abstract
+     ``ShapeDtypeStruct`` inputs (no allocation — a 72B tree is free),
+  2. ``jax.jit(...).lower(...)`` then ``.compile()`` — success proves the
+     sharding config is coherent (no mismatched collectives, no
+     unpartitionable ops),
+  3. records ``compiled.memory_analysis()`` (fits-in-HBM proof),
+     raw ``compiled.cost_analysis()`` and the trip-count-corrected HLO
+     costs (``launch/hlo_analysis.py``), analytic MODEL_FLOPS, and the
+     three roofline terms, into ``results/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, get_arch
+from repro.launch.flops import model_flops
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (GED_SHAPES, SHAPE_ORDER, SHAPES,
+                                 cell_skip_reason)
+from repro.launch.steps import build_cell, build_ged
+from repro.parallel.sharding import set_rules
+
+# TPU v5e roofline constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # ICI, bytes/s/link
+
+GED_CELLS = {"ged-verify": "verify_db", "ged-compute": "compute"}
+
+
+def all_cells():
+    cells = []
+    for arch in sorted(ARCHS):
+        for shape in SHAPE_ORDER:
+            cells.append((arch, shape))
+    for arch, shape in GED_CELLS.items():
+        cells.append((arch, shape))
+    return cells
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             force: bool = False) -> dict:
+    tag = f"{arch}__{shape_name}__{mesh_kind}"
+    out_path = out_dir / f"{tag}.json"
+    if out_path.exists() and not force:
+        rec = json.loads(out_path.read_text())
+        print(f"[skip-cached] {tag}: {rec.get('status')}")
+        return rec
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = mesh.devices.size
+    pod_boundary = 256 if multi else 0
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "chips": n_chips, "status": "error"}
+    t0 = time.time()
+    try:
+        if arch in GED_CELLS:
+            plan = build_ged(GED_SHAPES[shape_name], mesh)
+            mf = None
+        else:
+            cfg = get_arch(arch)
+            sh = SHAPES[shape_name]
+            skip = cell_skip_reason(cfg, sh)
+            if skip:
+                rec["status"] = "skipped"
+                rec["reason"] = skip
+                out_path.write_text(json.dumps(rec, indent=1))
+                print(f"[skipped ] {tag}: {skip}")
+                return rec
+            plan = build_cell(cfg, sh, mesh)
+            mf = model_flops(cfg, sh)
+
+        with mesh:
+            jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                             out_shardings=plan.out_shardings,
+                             donate_argnums=plan.donate_argnums)
+            lowered = jitted.lower(*plan.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_per_device": (ma.argument_size_in_bytes
+                                      + ma.output_size_in_bytes
+                                      + ma.temp_size_in_bytes
+                                      - ma.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost_analysis"] = {
+            "flops": float(ca.get("flops", -1.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
+        }
+
+        hlo = analyze_hlo(compiled.as_text(), pod_boundary=pod_boundary)
+        rec["hlo"] = hlo
+        # TPU-corrected peak: the CPU backend materialises f32 copies of
+        # bf16 dot operands (MXU consumes bf16 natively) — subtract them.
+        rec["memory"]["f32_staging_bytes"] = hlo["f32_staging_bytes"]
+        # staging lives in temps; clamp so corrected >= args + out - alias
+        ma_ = rec["memory"]
+        rec["memory"]["peak_bytes_tpu_corrected"] = (
+            ma_["argument_bytes"] + ma_["output_bytes"]
+            - ma_["alias_bytes"]
+            + max(ma_["temp_bytes"] - hlo["f32_staging_bytes"], 0))
+
+        terms = {
+            "compute_s": hlo["flops"] / PEAK_FLOPS,
+            "memory_s": hlo["bytes_accessed"] / HBM_BW,
+            "collective_s": hlo["collective_bytes"] / LINK_BW,
+        }
+        terms["bottleneck"] = max(terms, key=lambda k: terms[k]
+                                  if k.endswith("_s") else -1)
+        rec["roofline"] = terms
+        if mf is not None:
+            rec["model_flops"] = mf
+            per_dev_model = mf["model_flops"] / n_chips
+            rec["roofline"]["model_compute_s"] = per_dev_model / PEAK_FLOPS
+            rec["roofline"]["useful_flops_ratio"] = (
+                per_dev_model / hlo["flops"] if hlo["flops"] else 0.0)
+
+        step_s = max(terms["compute_s"], terms["memory_s"],
+                     terms["collective_s"])
+        rec["roofline"]["step_time_lower_bound_s"] = step_s
+        if mf is not None and step_s > 0:
+            rec["roofline"]["mfu_upper_bound"] = (
+                mf["model_flops"] / n_chips / PEAK_FLOPS) / step_s
+
+        rec["timing"] = {"lower_s": round(t_lower, 2),
+                         "compile_s": round(t_compile, 2)}
+        rec["meta"] = {k: v for k, v in plan.meta.items()}
+        rec["status"] = "ok"
+        print(f"[ok       ] {tag}: lower {t_lower:.1f}s compile "
+              f"{t_compile:.1f}s bottleneck={terms['bottleneck']} "
+              f"peak/dev={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB")
+    except Exception as e:          # record the failure — it is a bug
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL     ] {tag}: {rec['error']}")
+    finally:
+        set_rules(None)
+        jax.clear_caches()
+
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id | 'all' | 'ged-verify' | 'ged-compute'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    cells = all_cells()
+    if args.list:
+        for a, s in cells:
+            print(f"{a:24s} {s}")
+        return
+
+    if args.arch != "all":
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape != "all":
+        cells = [(a, s) for a, s in cells if s == args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_fail = 0
+    for mesh_kind in meshes:
+        for arch, shape in cells:
+            rec = run_cell(arch, shape, mesh_kind, out_dir,
+                           force=args.force)
+            if rec["status"] == "error":
+                n_fail += 1
+            else:
+                n_ok += 1
+    print(f"\ndry-run complete: {n_ok} ok/skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

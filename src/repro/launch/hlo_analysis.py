@@ -1,0 +1,470 @@
+"""Trip-count-corrected HLO cost analysis for the roofline.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE (XLA's
+HloCostAnalysis has no static trip counts), which under-reports a scanned
+L-layer model by ~L×.  Scanned layers are exactly how every model here is
+written, so we parse ``compiled.as_text()`` ourselves:
+
+* build a per-computation symbol table (instruction -> output shape),
+* extract static trip counts from each ``while`` condition
+  (``compare(%iv, %constant), direction=LT`` — the lax.scan pattern),
+* walk the call graph (ENTRY -> while/fusion/call/conditional) multiplying
+  instruction costs by the product of enclosing trip counts,
+* FLOPs: dot = 2·prod(out)·prod(contracting dims); convolution =
+  2·prod(out)·prod(window)·(Cin/groups); elementwise/reduce = element count,
+* bytes: operands + output at *fusion boundaries* only (a proxy for HBM
+  traffic on TPU, where fusion internals live in VMEM/VREGs),
+* collective bytes: Σ operand bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (+ ``-start`` variants),
+  trip-count multiplied, split into ICI vs cross-pod (DCN) by inspecting
+  replica groups.
+
+All numbers are per-device (the module is post-SPMD).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OPCODE_RE = re.compile(r"(?:^|\s)([a-z][a-z0-9\-]*)\(")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "and", "or", "xor", "not", "negate", "abs", "sign", "floor", "ceil",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "sine", "cosine", "tan", "atan2",
+    "compare", "select", "clamp", "remainder", "round-nearest-afz",
+    "round-nearest-even", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "erf", "is-finite", "stochastic-convert",
+}
+
+_FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "opt-barrier", "domain",
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start", "ragged-all-to-all",
+}
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(shape_text: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(shape_text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_dims(shape_text: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_text)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr]
+    table: Dict[str, Instr]
+
+
+def _split_operands(text: str) -> List[str]:
+    ops, depth, cur = [], 0, []
+    for ch in text:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            ops.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        tail = "".join(cur).strip()
+        if tail:
+            ops.append(tail)
+    return ops
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    om = _OPCODE_RE.search(rest)
+    if not om:
+        return None
+    shape = rest[: om.start(1)].strip()
+    # operand list: balanced parens starting right after the opcode
+    i = om.end(1)
+    while i < len(rest) and rest[i] != "(":
+        i += 1
+    depth, j = 0, i
+    while j < len(rest):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        j += 1
+    operand_text = rest[i + 1: j]
+    attrs = rest[j + 1:]
+    opnames = []
+    for op in _split_operands(operand_text):
+        nm = re.search(r"%([\w.\-]+)", op)
+        opnames.append(nm.group(1) if nm else op)
+    return Instr(name, shape, om.group(1), opnames, attrs)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            cm = _COMP_RE.match(stripped)
+            if cm:
+                cur = Computation(cm.group(2), bool(cm.group(1)), [], {})
+            continue
+        if stripped == "}" or stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            cur.instrs.append(ins)
+            cur.table[ins.name] = ins
+    return comps
+
+
+# ------------------------------------------------------------- trip counts
+
+def _const_value(comp: Computation, name: str) -> Optional[int]:
+    ins = comp.table.get(name)
+    if ins is None:
+        return None
+    if ins.opcode == "constant":
+        m = re.search(r"constant\((-?\d+)\)", ins.shape + " constant(" +
+                      ",".join(ins.operands) + ")")
+        # constant value is printed inside the parens we treated as operands
+        if ins.operands and re.fullmatch(r"-?\d+", ins.operands[0] or ""):
+            return int(ins.operands[0])
+        if m:
+            return int(m.group(1))
+        return None
+    if ins.opcode in ("broadcast", "copy", "convert") and ins.operands:
+        return _const_value(comp, ins.operands[0])
+    return None
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+
+
+def _trip_count(while_ins: Instr, cond: Optional[Computation]
+                ) -> Optional[int]:
+    """XLA records static trips in backend_config (lax.scan/fori loops);
+    fall back to the ``compare(iv, N), direction=LT`` condition pattern."""
+    m = _TRIP_RE.search(while_ins.attrs)
+    if m:
+        return int(m.group(1))
+    if cond is None:
+        return None
+    for ins in cond.instrs:
+        if ins.opcode != "compare" or "direction=LT" not in ins.attrs:
+            continue
+        for op in ins.operands:
+            v = _const_value(cond, op)
+            if v is not None and v > 0:
+                return v
+    return None
+
+
+# ------------------------------------------------------------------- flops
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = _shape_elems(ins.shape)
+    lhs = comp.table.get(ins.operands[0]) if ins.operands else None
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    contracting = 1
+    if lhs is not None and m and m.group(1):
+        dims = _first_dims(lhs.shape)
+        for di in m.group(1).split(","):
+            i = int(di)
+            if i < len(dims):
+                contracting *= dims[i]
+    return 2.0 * out_elems * contracting
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = _shape_elems(ins.shape)
+    window = 1
+    m = re.search(r"window=\{[^}]*size=([\dx]+)", ins.attrs)
+    if m:
+        for d in m.group(1).split("x"):
+            window *= int(d)
+    groups = 1
+    g = re.search(r"feature_group_count=(\d+)", ins.attrs)
+    if g:
+        groups = int(g.group(1))
+    cin = 1
+    dl = re.search(r"dim_labels=([\w?]+)_", ins.attrs)
+    if dl and ins.operands:
+        lhs = comp.table.get(ins.operands[0])
+        if lhs is not None:
+            f_pos = dl.group(1).find("f")
+            dims = _first_dims(lhs.shape)
+            if 0 <= f_pos < len(dims):
+                cin = dims[f_pos]
+    return 2.0 * out_elems * window * max(cin // max(groups, 1), 1)
+
+
+# -------------------------------------------------------------------- walk
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    dcn_bytes: float = 0.0
+    collective_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_count: float = 0.0
+    f32_staging_bytes: float = 0.0   # CPU-only bf16->f32 dot legalization
+    warnings: List[str] = dataclasses.field(default_factory=list)
+
+
+def _called(attrs: str, key: str) -> List[str]:
+    m = re.search(key + r"=\{([^}]*)\}", attrs)      # brace list form
+    if m:
+        return [p.strip().lstrip("%") for p in m.group(1).split(",")
+                if p.strip()]
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)     # single-name form
+    return [m.group(1)] if m else []
+
+
+def _root_is_dus(comp: Computation) -> bool:
+    """True if the fusion computes an in-place dynamic-update-slice."""
+    for ins in reversed(comp.instrs):
+        if ins.opcode in ("bitcast", "tuple"):
+            continue
+        return ins.opcode == "dynamic-update-slice"
+    return False
+
+
+def _crosses_pod(attrs: str, pod_boundary: int) -> bool:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if not m and "replica_groups=[" in attrs:
+        m = re.search(r"replica_groups=\[[\d,<=]*\]([\d,]+)", attrs)
+    if not m:
+        return False
+    ids = [int(x) for x in m.group(1).split(",") if x]
+    return any(i < pod_boundary for i in ids) and \
+        any(i >= pod_boundary for i in ids)
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    total = 0
+    for op in ins.operands:
+        ref = comp.table.get(op)
+        if ref is not None:
+            total += _shape_bytes(ref.shape)
+    return total
+
+
+def _walk(comp: Computation, comps: Dict[str, Computation], mult: float,
+          costs: Costs, in_fusion: bool, pod_boundary: int) -> None:
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op in _FREE:
+            continue
+        out_bytes = _shape_bytes(ins.shape)
+
+        if op in _COLLECTIVES:
+            b = _operand_bytes(ins, comp) * mult
+            costs.collective_bytes += b
+            costs.collective_count += mult
+            costs.collective_by_op[op.replace("-start", "")] = \
+                costs.collective_by_op.get(op.replace("-start", ""), 0.0) + b
+            if pod_boundary and _crosses_pod(ins.attrs, pod_boundary):
+                costs.dcn_bytes += b
+            if not in_fusion:
+                costs.bytes_accessed += (_operand_bytes(ins, comp)
+                                         + out_bytes) * mult
+            continue
+
+        if op == "while":
+            body, cond = _called(ins.attrs, "body"), \
+                _called(ins.attrs, "condition")
+            cond_comp = comps.get(cond[0]) if cond else None
+            trip = _trip_count(ins, cond_comp)
+            if trip is None:
+                trip = 1
+                costs.warnings.append(
+                    f"while {ins.name}: trip count unparsed, using 1")
+            if body and body[0] in comps:
+                _walk(comps[body[0]], comps, mult * trip, costs, in_fusion,
+                      pod_boundary)
+            if cond and cond[0] in comps:
+                _walk(comps[cond[0]], comps, mult * (trip + 1), costs,
+                      in_fusion, pod_boundary)
+            continue
+
+        if op == "fusion":
+            called = _called(ins.attrs, "calls")
+            fused = comps.get(called[0]) if called else None
+            if fused is not None:
+                _walk(fused, comps, mult, costs, True, pod_boundary)
+            if not in_fusion:
+                opb = _operand_bytes(ins, comp)
+                if fused is not None and _root_is_dus(fused):
+                    # in-place update fusion: the big operand aliases the
+                    # output; traffic ~= 2x everything except that operand
+                    big = max((_shape_bytes(comp.table[o].shape)
+                               for o in ins.operands if o in comp.table),
+                              default=0)
+                    costs.bytes_accessed += 2.0 * max(opb - big, 0) * mult
+                else:
+                    costs.bytes_accessed += (opb + out_bytes) * mult
+            continue
+
+        if op == "call":
+            called = _called(ins.attrs, "to_apply")
+            if called and called[0] in comps:
+                _walk(comps[called[0]], comps, mult, costs, in_fusion,
+                      pod_boundary)
+            continue
+
+        if op == "conditional":
+            for br in _called(ins.attrs, "branch_computations"):
+                if br in comps:
+                    _walk(comps[br], comps, mult, costs, in_fusion,
+                          pod_boundary)
+            continue
+
+        if op in ("custom-call",):
+            if not in_fusion:
+                costs.bytes_accessed += (_operand_bytes(ins, comp)
+                                         + out_bytes) * mult
+            continue
+
+        # ---- plain compute op
+        if op == "dot":
+            costs.flops += _dot_flops(ins, comp) * mult
+        elif op == "convolution":
+            costs.flops += _conv_flops(ins, comp) * mult
+        elif op in _ELEMENTWISE:
+            costs.flops += _shape_elems(ins.shape) * mult
+        elif op in ("reduce", "reduce-window", "sort", "scatter",
+                    "select-and-scatter"):
+            costs.flops += _operand_bytes(ins, comp) / 4.0 * mult
+        # data movement ops contribute bytes only.  Sliced reads/writes
+        # (dynamic-slice, gather, DUS) touch only the slice, not the full
+        # operand — counting operands fully inflated a layer loop that
+        # dynamic-slices from a 9 GiB stacked param tree by ~80x.
+        if in_fusion:
+            continue
+        if op in ("dynamic-slice", "gather", "slice"):
+            costs.bytes_accessed += 2.0 * out_bytes * mult
+        elif op in ("dynamic-update-slice", "scatter"):
+            upd = 0
+            if len(ins.operands) >= 2:
+                ref = comp.table.get(ins.operands[1])
+                if ref is not None:
+                    upd = _shape_bytes(ref.shape)
+            costs.bytes_accessed += 2.0 * max(upd, 1) * mult
+        else:
+            costs.bytes_accessed += (_operand_bytes(ins, comp)
+                                     + out_bytes) * mult
+
+
+def analyze_hlo(text: str, pod_boundary: int = 0) -> Dict[str, Any]:
+    """Per-device trip-count-corrected costs from post-SPMD HLO text.
+
+    ``pod_boundary``: first device id of pod 1 (256 in the 2-pod mesh);
+    0 disables DCN attribution.
+    """
+    comps = parse_module(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    costs = Costs()
+    _walk(entry, comps, 1.0, costs, False, pod_boundary)
+    costs.f32_staging_bytes = _f32_staging(comps)
+    return {
+        "flops": costs.flops,
+        "bytes_accessed": costs.bytes_accessed,
+        "collective_bytes": costs.collective_bytes,
+        "dcn_bytes": costs.dcn_bytes,
+        "collective_by_op": costs.collective_by_op,
+        "collective_count": costs.collective_count,
+        "f32_staging_bytes": costs.f32_staging_bytes,
+        "warnings": costs.warnings[:20],
+        "n_computations": len(comps),
+    }
+
+
+def _f32_staging(comps: Dict[str, Computation],
+                 threshold: int = 64 * 2 ** 20) -> float:
+    """Bytes of large f32 buffers produced by converting bf16 tensors.
+
+    The CPU backend legalises ``dot(bf16, bf16) -> f32`` by materialising
+    f32 copies of the operands (often loop-hoisted to full stacked-layer
+    size); the TPU MXU consumes bf16 natively with f32 accumulation and
+    allocates none of this.  Reported so the dry-run can state a
+    TPU-corrected peak alongside the raw CPU ``memory_analysis()``.
+    """
+    total = 0.0
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode != "convert" or not ins.shape.startswith("f32"):
+                continue
+            src = comp.table.get(ins.operands[0]) if ins.operands else None
+            if src is None or not src.shape.startswith("bf16"):
+                continue
+            b = _shape_bytes(ins.shape)
+            if b >= threshold:
+                total += b
+    return total

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing this module never
+touches jax device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; real launches get the same topology from the TPU runtime.
+
+Topology (v5e target):
+  single pod : (16, 16)    axes ("data", "model")   = 256 chips
+  multi pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+``model`` is the ICI-contiguous axis (TP/EP/KV-shard); ``data`` carries
+FSDP + batch; ``pod`` composes with ``data`` for batch and hosts the
+optional 2-stage pipeline wrapper.  Gradient all-reduces are emitted
+hierarchically (ICI first, DCN once) because ``pod`` is the outermost axis.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh for unit tests on forced host devices."""
+    return jax.make_mesh(shape, axes)
+
+
+def chips(mesh: jax.sharding.Mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,268 @@
+"""Cell builders: (arch x shape x mesh) -> a lowerable, sharded step.
+
+Used by ``launch/dryrun.py`` (abstract lower+compile) and by the real
+train/serve launchers (same shardings, concrete arrays).
+
+Sharding policy
+  train : FSDP over ``data`` (params' embed axis), TP over ``model``,
+          batch over (``pod``, ``data``); params+opt donated.
+  serve : params bf16, replicated over ``data``/``pod`` and TP over
+          ``model`` (no per-layer weight gathers on the latency path);
+          KV cache sequence-sharded over ``model`` (flash-decode),
+          batch over (``pod``, ``data``); caches donated.
+  ged   : pure DP — pair batch sharded over every mesh axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.models.params import abstract_params, param_pspecs, param_specs, PSpec
+from repro.optim import AdamWConfig
+from repro.parallel.sharding import (ShardingRules, default_rules,
+                                     logical_spec, set_rules)
+from repro.launch.shapes import (GedShapeSpec, ShapeSpec, ged_input_specs,
+                                 input_specs)
+
+
+@dataclasses.dataclass
+class CellPlan:
+    """Everything needed to lower one grid cell."""
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    rules: Optional[ShardingRules]
+    meta: Dict[str, Any]
+
+
+def _ns(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _tree_ns(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: _ns(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def abstract_opt_state(cfg: ArchConfig) -> Dict[str, Any]:
+    ap = abstract_params(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {"m": jax.tree.map(f32, ap), "v": jax.tree.map(f32, ap),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def opt_pspecs(cfg: ArchConfig, rules: ShardingRules) -> Dict[str, Any]:
+    pp = param_pspecs(cfg, rules)
+    return {"m": pp, "v": pp, "step": P()}
+
+
+def _abstract_params_dtype(cfg: ArchConfig, dtype) -> Any:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+                        param_specs(cfg),
+                        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def _input_shardings(mesh: Mesh, specs: Dict[str, Any]) -> Dict[str, Any]:
+    ba = _batch_axes(mesh)
+    ba_size = 1
+    for a in ba:
+        ba_size *= mesh.shape[a]
+    out = {}
+    for k, v in specs.items():
+        if v.ndim == 0 or v.shape[0] % ba_size != 0:
+            # degrade: replicate when the batch dim does not divide the
+            # batch mesh axes (long_500k's global_batch=1)
+            out[k] = _ns(mesh, P(*([None] * v.ndim)))
+        else:
+            out[k] = _ns(mesh, P(ba, *([None] * (v.ndim - 1))))
+    return out
+
+
+def _cache_pspecs(cfg: ArchConfig, batch: int, cache_len: int,
+                  rules: ShardingRules) -> Dict[str, P]:
+    shapes = T.cache_shapes(cfg, batch, cache_len)
+    axes = T.cache_axes(cfg)
+    return {k: logical_spec(shape, axes[k], rules)
+            for k, (shape, _) in shapes.items()}
+
+
+# ------------------------------------------------------------------- train
+
+def build_train(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                impl: str = "auto", schedule: str = "dense",
+                accum: Optional[int] = None, fsdp: bool = True) -> CellPlan:
+    rules = default_rules(mesh, fsdp=fsdp)
+    set_rules(rules)
+    acc = cfg.train_accum if accum is None else accum
+    step = T.make_train_step(cfg, AdamWConfig(), accum=acc, impl=impl,
+                             schedule=schedule)
+
+    params_a = abstract_params(cfg)
+    opt_a = abstract_opt_state(cfg)
+    batch_a = input_specs(cfg, shape)
+
+    pshard = _tree_ns(mesh, param_pspecs(cfg, rules))
+    oshard = _tree_ns(mesh, opt_pspecs(cfg, rules))
+    bshard = _input_shardings(mesh, batch_a)
+    metrics_shard = {k: _ns(mesh, P()) for k in ("grad_norm", "lr", "loss")}
+
+    return CellPlan(
+        fn=step,
+        args=(params_a, opt_a, batch_a),
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, metrics_shard),
+        donate_argnums=(0, 1),
+        rules=rules,
+        meta={"kind": "train", "accum": acc},
+    )
+
+
+# ----------------------------------------------------------------- prefill
+
+def build_prefill(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                  impl: str = "auto", schedule: str = "dense") -> CellPlan:
+    rules = default_rules(mesh, fsdp=False)   # serve: weights TP, no FSDP
+    set_rules(rules)
+    ins = input_specs(cfg, shape)
+    b = shape.global_batch
+
+    params_a = _abstract_params_dtype(cfg, jnp.bfloat16)
+    pshard = _tree_ns(mesh, param_pspecs(cfg, rules))
+    inshard = _input_shardings(mesh, ins)
+
+    fn = functools.partial(_prefill_fn, cfg=cfg, impl=impl, schedule=schedule)
+
+    ba = _batch_axes(mesh)
+    logits_shard = _ns(mesh, logical_spec((b, cfg.padded_vocab),
+                                          ("batch", "vocab"), rules))
+    cache_shard = _tree_ns(
+        mesh, _cache_pspecs(cfg, b, _stream_len(cfg, shape), rules))
+
+    return CellPlan(
+        fn=fn,
+        args=(params_a, ins),
+        in_shardings=(pshard, inshard),
+        out_shardings=(logits_shard, cache_shard),
+        donate_argnums=(),
+        rules=rules,
+        meta={"kind": "prefill", "batch_axes": ba},
+    )
+
+
+def _stream_len(cfg: ArchConfig, shape: ShapeSpec) -> int:
+    # cache length produced by a prefill of this shape (vlm: patches + text)
+    return shape.seq_len
+
+
+def _prefill_fn(params, ins, *, cfg: ArchConfig, impl, schedule):
+    return T.prefill_step(params, ins["tokens"], cfg,
+                          frames=ins.get("frames"),
+                          patches=ins.get("patches"),
+                          impl=impl, schedule=schedule)
+
+
+# ------------------------------------------------------------------ decode
+
+def build_decode(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> CellPlan:
+    rules = default_rules(mesh, fsdp=False)
+    set_rules(rules)
+    b, s = shape.global_batch, shape.seq_len
+    ins = input_specs(cfg, shape)
+
+    params_a = _abstract_params_dtype(cfg, jnp.bfloat16)
+    caches_a = T.init_caches(cfg, b, s, abstract=True)
+
+    pshard = _tree_ns(mesh, param_pspecs(cfg, rules))
+    cshard = _tree_ns(mesh, _cache_pspecs(cfg, b, s, rules))
+    inshard = _input_shardings(mesh, ins)
+
+    fn = functools.partial(_decode_fn, cfg=cfg)
+
+    logits_shard = _ns(mesh, logical_spec((b, cfg.padded_vocab),
+                                          ("batch", "vocab"), rules))
+
+    return CellPlan(
+        fn=fn,
+        args=(params_a, caches_a, ins["token"], ins["cache_len"]),
+        in_shardings=(pshard, cshard, inshard["token"], inshard["cache_len"]),
+        out_shardings=(logits_shard, cshard),
+        donate_argnums=(1,),
+        rules=rules,
+        meta={"kind": "decode"},
+    )
+
+
+def _decode_fn(params, caches, token, cache_len, *, cfg: ArchConfig):
+    return T.decode_step(params, caches, token, cache_len, cfg)
+
+
+# --------------------------------------------------------------------- ged
+
+def build_ged(spec: GedShapeSpec, mesh: Mesh, *, n_vlabels: int = 64,
+              n_elabels: int = 8, use_kernel: bool = False) -> CellPlan:
+    """The paper's engine as a mesh workload: pure DP over pairs.
+
+    ``use_kernel=False`` in dry-runs so XLA sees the engine math for
+    cost analysis (the Pallas path is validated in tests/benchmarks).
+    """
+    from repro.core.engine.search import EngineConfig, run_pair
+
+    set_rules(None)
+    ec = EngineConfig(pool=spec.pool, expand=spec.expand,
+                      max_iters=spec.max_iters, sweeps=spec.sweeps,
+                      bound="hybrid", strategy="astar",
+                      use_kernel=use_kernel)
+    n_chips = mesh.devices.size
+    ins = ged_input_specs(spec, n_chips)
+
+    all_axes = P(tuple(mesh.axis_names))
+    inshard = {k: _ns(mesh, all_axes if v.ndim == 1
+                      else P(tuple(mesh.axis_names),
+                             *([None] * (v.ndim - 1))))
+               for k, v in ins.items()}
+
+    def fn(qv, gv, qa, ga, order, n, taus):
+        def one(qv1, gv1, qa1, ga1, o1, n1, t1):
+            return run_pair((qv1, gv1, qa1, ga1, o1, n1,
+                             n_vlabels, n_elabels), ec, t1,
+                            spec.verification)
+        return jax.vmap(one)(qv, gv, qa, ga, order, n, taus)
+
+    args = tuple(ins[k] for k in ("qv", "gv", "qa", "ga", "order", "n",
+                                  "taus"))
+    in_sh = tuple(inshard[k] for k in ("qv", "gv", "qa", "ga", "order", "n",
+                                       "taus"))
+    return CellPlan(
+        fn=fn, args=args, in_shardings=in_sh, out_shardings=None,
+        donate_argnums=(), rules=None,
+        meta={"kind": "ged-verify" if spec.verification else "ged-compute",
+              "pairs": ins["qv"].shape[0], "slots": spec.slots,
+              "pool": spec.pool},
+    )
+
+
+# ------------------------------------------------------------------ entry
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+               **overrides) -> CellPlan:
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, **overrides)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, **overrides)
+    if shape.kind == "decode":
+        return build_decode(cfg, shape, mesh)
+    raise ValueError(shape.kind)

@@ -1,0 +1,5 @@
+"""Model substrate: configs, layers, and per-family step functions."""
+
+from repro.models.config import ArchConfig, reduced
+
+__all__ = ["ArchConfig", "reduced"]

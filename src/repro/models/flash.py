@@ -1,0 +1,251 @@
+"""Blocked online-softmax attention (pure-JAX "flash") with custom VJP.
+
+Naive attention materialises (B, H, S, T) scores — 34 GB/device at
+train_4k and 4 TB at prefill_32k.  This module computes attention in
+(block_q x block_k) tiles with running (max, sum, acc) statistics, and a
+``custom_vjp`` whose backward *recomputes* per-tile scores instead of saving
+them — O(S * block) live memory in both directions.  It is the pure-JAX
+reference (and the ``ref.py`` oracle for the Pallas port in
+``repro/kernels/flash_attention.py``); the tiling mirrors what the TPU
+kernel does in VMEM.
+
+Two schedules:
+
+* ``schedule="dense"`` — one scan over KV tiles, full rectangle computed,
+  causality by masking.  2x FLOP waste for causal attention (visible in the
+  dry-run HLO; the §Perf log removes it).
+* ``schedule="tri"`` — one scan over the *static pair list*
+  ``[(qi, ki) for qi in range(nq) for ki in range(qi+1)]``: only the lower
+  triangle of tiles is ever computed.  Same static shapes, half the FLOPs.
+  (Perf iteration 1; exact same numerics as dense.)
+
+GQA is handled natively: q (B, S, Hq, hd), k/v (B, T, Hk, hd) with
+Hq = G * Hk; tiles contract in grouped form so k/v are never repeated.
+
+``window`` (sliding-window attention) and ``kv_valid`` (cross-attention
+padding) are traced operands so one compiled body serves gemma3's mixed
+local/global layer stack under ``lax.scan``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _tile_mask(qi, ki, bq, bk, causal, window, kv_valid, q_offset):
+    """(bq, bk) bool mask for tile (qi, ki). window/kv_valid are traced."""
+    qpos = q_offset + qi * bq + jnp.arange(bq)[:, None]
+    kpos = ki * bk + jnp.arange(bk)[None, :]
+    m = kpos < kv_valid
+    if causal:
+        m &= kpos <= qpos
+        m &= (window <= 0) | (kpos > qpos - window)
+    return m
+
+
+def _scores(qt, kt, scale):
+    # qt: (B,Hk,G,bq,hd)  kt: (B,Hk,bk,hd) -> (B,Hk,G,bq,bk) f32
+    return jax.lax.dot_general(
+        qt, kt, (((4,), (3,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32) * scale
+
+
+def _pairs(nq: int, nk: int, causal: bool, bq: int, bk: int
+           ) -> Tuple[np.ndarray, np.ndarray]:
+    if not causal:
+        qi, ki = np.meshgrid(np.arange(nq), np.arange(nk), indexing="ij")
+        return qi.reshape(-1), ki.reshape(-1)
+    out = [(q, k) for q in range(nq) for k in range(nk)
+           if k * bk <= q * bq + bq - 1]  # tile intersects causal region
+    arr = np.asarray(out, dtype=np.int32)
+    return arr[:, 0], arr[:, 1]
+
+
+def _flash_fwd(q, k, v, causal: bool, schedule: str, block_q: int,
+               block_k: int, window, kv_valid, q_offset):
+    b, s, hq, hd = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = hq // hk
+    scale = 1.0 / math.sqrt(hd)
+    nq, nk = s // block_q, t // block_k
+
+    qf = jnp.moveaxis(q.reshape(b, s, hk, g, hd), 1, 3)     # (B,Hk,G,S,hd)
+    kf = jnp.moveaxis(k, 1, 2)                              # (B,Hk,T,hd)
+    vf = jnp.moveaxis(v, 1, 2)
+
+    acc0 = jnp.zeros((b, hk, g, s, hd), jnp.float32)
+    m0 = jnp.full((b, hk, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, s), jnp.float32)
+
+    if schedule == "tri" and causal:
+        qis, kis = _pairs(nq, nk, True, block_q, block_k)
+    else:
+        qis, kis = _pairs(nq, nk, False, block_q, block_k)
+
+    def body(carry, idx):
+        acc, m, l = carry
+        qi, ki = idx
+        qt = jax.lax.dynamic_slice_in_dim(qf, qi * block_q, block_q, axis=3)
+        kt = jax.lax.dynamic_slice_in_dim(kf, ki * block_k, block_k, axis=2)
+        vt = jax.lax.dynamic_slice_in_dim(vf, ki * block_k, block_k, axis=2)
+        sc = _scores(qt, kt, scale)
+        mask = _tile_mask(qi, ki, block_q, block_k, causal, window,
+                          kv_valid, q_offset)
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        mt = jax.lax.dynamic_slice_in_dim(m, qi * block_q, block_q, axis=3)
+        lt = jax.lax.dynamic_slice_in_dim(l, qi * block_q, block_q, axis=3)
+        at = jax.lax.dynamic_slice_in_dim(acc, qi * block_q, block_q, axis=3)
+        m_new = jnp.maximum(mt, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(mt - m_new)
+        l_new = lt * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p, vt.astype(jnp.float32), (((4,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)             # (B,Hk,G,bq,hd)
+        a_new = at * corr[..., None] + pv
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, qi * block_q, 3)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, qi * block_q, 3)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, qi * block_q, 3)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (jnp.asarray(qis, jnp.int32), jnp.asarray(kis, jnp.int32)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None])
+    lse = m + jnp.log(l_safe)
+    out_std = jnp.moveaxis(out, 3, 1).reshape(b, s, hq, hd)
+    return out_std.astype(q.dtype), (out, lse)
+
+
+def _flash_bwd_impl(q, k, v, out, lse, do, causal, schedule, block_q,
+                    block_k, window, kv_valid, q_offset):
+    b, s, hq, hd = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = hq // hk
+    scale = 1.0 / math.sqrt(hd)
+    nq, nk = s // block_q, t // block_k
+
+    qf = jnp.moveaxis(q.reshape(b, s, hk, g, hd), 1, 3).astype(jnp.float32)
+    kf = jnp.moveaxis(k, 1, 2).astype(jnp.float32)
+    vf = jnp.moveaxis(v, 1, 2).astype(jnp.float32)
+    dof = jnp.moveaxis(do.reshape(b, s, hk, g, hd), 1, 3).astype(jnp.float32)
+    delta = jnp.sum(out * dof, axis=-1)                     # (B,Hk,G,S)
+
+    if schedule == "tri" and causal:
+        qis, kis = _pairs(nq, nk, True, block_q, block_k)
+    else:
+        qis, kis = _pairs(nq, nk, False, block_q, block_k)
+
+    def body(carry, idx):
+        dq, dk, dv = carry
+        qi, ki = idx
+        qt = jax.lax.dynamic_slice_in_dim(qf, qi * block_q, block_q, axis=3)
+        kt = jax.lax.dynamic_slice_in_dim(kf, ki * block_k, block_k, axis=2)
+        vt = jax.lax.dynamic_slice_in_dim(vf, ki * block_k, block_k, axis=2)
+        dot = jax.lax.dynamic_slice_in_dim(dof, qi * block_q, block_q, axis=3)
+        lt = jax.lax.dynamic_slice_in_dim(lse, qi * block_q, block_q, axis=3)
+        dt = jax.lax.dynamic_slice_in_dim(delta, qi * block_q, block_q, axis=3)
+        sc = _scores(qt, kt, scale)
+        mask = _tile_mask(qi, ki, block_q, block_k, causal, window,
+                          kv_valid, q_offset)
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        p = jnp.exp(sc - lt[..., None])                     # (B,Hk,G,bq,bk)
+        # dv_tile = p^T @ do
+        dv_t = jax.lax.dot_general(
+            p, dot, (((3,), (3,)), ((0, 1, 2), (0, 1, 2))),
+            preferred_element_type=jnp.float32)             # (B,Hk,G,bk,hd)
+        dp = jax.lax.dot_general(
+            dot, vt, (((4,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)             # (B,Hk,G,bq,bk)
+        ds = p * (dp - dt[..., None]) * scale
+        dq_t = jax.lax.dot_general(
+            ds, kt, (((4,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)             # (B,Hk,G,bq,hd)
+        dk_t = jax.lax.dot_general(
+            ds, qt, (((3,), (3,)), ((0, 1, 2), (0, 1, 2))),
+            preferred_element_type=jnp.float32)             # (B,Hk,G,bk,hd)
+        dq_old = jax.lax.dynamic_slice_in_dim(dq, qi * block_q, block_q, 3)
+        dq = jax.lax.dynamic_update_slice_in_dim(dq, dq_old + dq_t,
+                                                 qi * block_q, 3)
+        dk_old = jax.lax.dynamic_slice_in_dim(dk, ki * block_k, block_k, 2)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, dk_old + jnp.sum(dk_t, axis=2), ki * block_k, 2)
+        dv_old = jax.lax.dynamic_slice_in_dim(dv, ki * block_k, block_k, 2)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, dv_old + jnp.sum(dv_t, axis=2), ki * block_k, 2)
+        return (dq, dk, dv), None
+
+    dq0 = jnp.zeros_like(qf)
+    dk0 = jnp.zeros_like(kf)
+    dv0 = jnp.zeros_like(vf)
+    (dq, dk, dv), _ = jax.lax.scan(
+        body, (dq0, dk0, dv0),
+        (jnp.asarray(qis, jnp.int32), jnp.asarray(kis, jnp.int32)))
+    dq_std = jnp.moveaxis(dq, 3, 1).reshape(b, s, hq, hd).astype(q.dtype)
+    dk_std = jnp.moveaxis(dk, 2, 1).astype(k.dtype)
+    dv_std = jnp.moveaxis(dv, 2, 1).astype(v.dtype)
+    return dq_std, dk_std, dv_std
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True, schedule: str = "dense",
+                    block_q: int = 512, block_k: int = 512,
+                    window: jnp.ndarray | int = 0,
+                    kv_valid: jnp.ndarray | int = 10 ** 9,
+                    q_offset: jnp.ndarray | int = 0):
+    """q: (B,S,Hq,hd), k/v: (B,T,Hk,hd) -> (B,S,Hq,hd)."""
+    out, _ = _flash_fwd(q, k, v, causal, schedule, block_q, block_k,
+                        jnp.asarray(window), jnp.asarray(kv_valid),
+                        jnp.asarray(q_offset))
+    return out
+
+
+def _fwd_rule(q, k, v, causal, schedule, block_q, block_k, window=0,
+              kv_valid=10 ** 9, q_offset=0):
+    window = jnp.asarray(window)
+    kv_valid = jnp.asarray(kv_valid)
+    q_offset = jnp.asarray(q_offset)
+    out, (out_f32, lse) = _flash_fwd(q, k, v, causal, schedule, block_q,
+                                     block_k, window, kv_valid, q_offset)
+    return out, (q, k, v, out_f32, lse, window, kv_valid, q_offset)
+
+
+def _bwd_rule(causal, schedule, block_q, block_k, res, do):
+    q, k, v, out_f32, lse, window, kv_valid, q_offset = res
+    dq, dk, dv = _flash_bwd_impl(q, k, v, out_f32, lse, do, causal, schedule,
+                                 block_q, block_k, window, kv_valid, q_offset)
+    return (dq, dk, dv, jnp.zeros_like(window), jnp.zeros_like(kv_valid),
+            jnp.zeros_like(q_offset))
+
+
+flash_attention.defvjp(_fwd_rule, _bwd_rule)
+
+
+def reference_attention(q, k, v, causal=True, window=0, kv_valid=10 ** 9,
+                        q_offset=0):
+    """Naive O(S*T) oracle for tests (f32)."""
+    b, s, hq, hd = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = hq // hk
+    qf = q.reshape(b, s, hk, g, hd).astype(jnp.float32)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qf, k.astype(jnp.float32))
+    sc = sc / math.sqrt(hd)
+    qpos = q_offset + jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    m = kpos < kv_valid
+    if causal:
+        m &= kpos <= qpos
+        m &= (jnp.asarray(window) <= 0) | (kpos > qpos - window)
+    sc = jnp.where(m[None, None, None], sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return o.reshape(b, s, hq, hd).astype(q.dtype)

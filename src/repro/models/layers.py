@@ -1,0 +1,345 @@
+"""Shared layer library for the assigned architectures.
+
+Pure functions over parameter pytrees.  All matmuls run through ``dot`` which
+casts to the compute dtype (bf16 by default) and accumulates in f32.
+Sharding is annotated with logical axis names via ``repro.parallel.constrain``
+(no-ops without installed rules, so CPU smoke tests see plain code).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.parallel.sharding import constrain
+
+# --------------------------------------------------------------------- util
+
+def cdt(cfg: ArchConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def dot(x: jnp.ndarray, w: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    return jax.lax.dot_general(
+        x.astype(cdt(cfg)), w.astype(cdt(cfg)),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(cdt(cfg))
+
+
+def einsum(expr: str, *args, cfg: ArchConfig) -> jnp.ndarray:
+    cast = [a.astype(cdt(cfg)) for a in args]
+    return jnp.einsum(expr, *cast, preferred_element_type=jnp.float32
+                      ).astype(cdt(cfg))
+
+
+# -------------------------------------------------------------------- norms
+
+def norm(x: jnp.ndarray, p: Dict, cfg: ArchConfig, eps: float = 1e-6
+         ) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm in ("layernorm", "layernorm1p"):
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        scale = p["scale"] + 1.0 if cfg.norm == "layernorm1p" else p["scale"]
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        xn = xf * jax.lax.rsqrt(ms + eps)
+        scale = p["scale"] + 1.0 if cfg.norm == "rmsnorm1p" else p["scale"]
+        out = xn * scale
+    return out.astype(x.dtype)
+
+
+def head_rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6
+                 ) -> jnp.ndarray:
+    """qk-norm: RMS over the head dim. x: (..., hd), scale: (hd,)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- rope
+
+def _rope_angles(pos: jnp.ndarray, dims: int, theta: float) -> jnp.ndarray:
+    """pos: (...,) -> (..., dims/2) angles."""
+    freq = theta ** (-jnp.arange(0, dims, 2, dtype=jnp.float32) / dims)
+    return pos[..., None].astype(jnp.float32) * freq
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, cfg: ArchConfig,
+               theta: Optional[float] = None) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, hd).
+
+    * pos (B, S): standard RoPE over the first ``rope_pct * hd`` dims.
+    * pos (3, B, S): M-RoPE — the rotary half-dims are split into
+      ``cfg.vlm.mrope_sections`` groups driven by (t, h, w) position streams.
+    """
+    hd = x.shape[-1]
+    rot = int(hd * cfg.rope_pct)
+    rot -= rot % 2
+    th = cfg.rope_theta if theta is None else theta
+    if pos.ndim == 3 and cfg.vlm is not None:
+        secs = cfg.vlm.mrope_sections
+        assert sum(secs) == rot // 2, (secs, rot)
+        ang_parts = []
+        full = _rope_angles(pos, rot, th)          # (3, B, S, rot/2)
+        start = 0
+        for i, s in enumerate(secs):
+            ang_parts.append(full[i, ..., start:start + s])
+            start += s
+        ang = jnp.concatenate(ang_parts, axis=-1)  # (B, S, rot/2)
+    else:
+        ang = _rope_angles(pos, rot, th)           # (B, S, rot/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------- attention
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, s, f = x.shape
+    return x.reshape(b, s, n_heads, f // n_heads)
+
+
+def qkv_project(x: jnp.ndarray, p: Dict, cfg: ArchConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    q = dot(x, p["wq"], cfg)
+    k = dot(x, p["wk"], cfg)
+    v = dot(x, p["wv"], cfg)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = _split_heads(q, cfg.n_heads)
+    k = _split_heads(k, cfg.n_kv_heads)
+    v = _split_heads(v, cfg.n_kv_heads)
+    if cfg.qk_norm:
+        q = head_rmsnorm(q, p["q_norm"])
+        k = head_rmsnorm(k, p["k_norm"])
+    return q, k, v
+
+
+def _gqa_scores(q, k, cfg: ArchConfig):
+    """(B,S,Hq,hd) x (B,T,Hk,hd) -> (B,Hq,S,T) with GQA grouping."""
+    b, s, hq, hd = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, s, hk, g, hd)
+    out = einsum("bskgd,btkd->bkgst", qg, k, cfg=cfg)
+    return out.reshape(b, hk * g, s, t)
+
+
+def _gqa_out(w, v, cfg: ArchConfig):
+    """(B,Hq,S,T) x (B,T,Hk,hd) -> (B,S,Hq,hd)."""
+    b, hq, s, t = w.shape
+    hk = v.shape[2]
+    g = hq // hk
+    wg = w.reshape(b, hk, g, s, t)
+    out = einsum("bkgst,btkd->bskgd", wg, v, cfg=cfg)
+    return out.reshape(b, s, hq, v.shape[-1])
+
+
+def attention_train(x: jnp.ndarray, p: Dict, cfg: ArchConfig,
+                    pos: jnp.ndarray, window: int = 0,
+                    theta: Optional[float] = None,
+                    kv_x: Optional[jnp.ndarray] = None,
+                    causal: bool = True) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill).  window>0 = sliding window.
+
+    ``kv_x`` switches to cross-attention (no rope on k, no causal mask).
+    """
+    b, s, d = x.shape
+    if kv_x is None:
+        q, k, v = qkv_project(x, p, cfg)
+        rp = pos if pos.ndim == 3 else pos
+        q = apply_rope(q, rp, cfg, theta)
+        k = apply_rope(k, rp, cfg, theta)
+        t = s
+    else:
+        q = _split_heads(dot(x, p["wq"], cfg), cfg.n_heads)
+        k = _split_heads(dot(kv_x, p["wk"], cfg), cfg.n_kv_heads)
+        v = _split_heads(dot(kv_x, p["wv"], cfg), cfg.n_kv_heads)
+        t = kv_x.shape[1]
+        causal = False
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    scores = _gqa_scores(q, k, cfg).astype(jnp.float32) / math.sqrt(cfg.hd)
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(t)[None, :]
+        mask = ki <= qi
+        if window > 0:
+            mask &= ki > qi - window
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = _gqa_out(w.astype(cdt(cfg)), v, cfg)
+    o = o.reshape(b, s, -1)
+    o = dot(o, p["wo"], cfg)
+    if cfg.attn_out_bias:
+        o = o + p["bo"].astype(o.dtype)
+    return o
+
+
+def attention_decode(x: jnp.ndarray, p: Dict, cfg: ArchConfig,
+                     k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     pos: jnp.ndarray, cache_len: jnp.ndarray,
+                     window: int = 0, theta: Optional[float] = None,
+                     rolling: bool = False,
+                     k_scale: Optional[jnp.ndarray] = None,
+                     v_scale: Optional[jnp.ndarray] = None,
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against a (B, T, Hk, hd) cache.
+
+    The cache sequence axis is annotated ``kv_seq`` (sequence-sharded over the
+    ``model`` axis at scale); softmax statistics over the sharded axis lower
+    to partial reductions + small all-reduces (flash-decode pattern).
+
+    ``rolling=True`` treats the cache as a ring buffer of size ``window``
+    (gemma3 local layers at 500k context): slot = pos % window.
+
+    ``k_scale``/``v_scale`` (B, Hk) switch to an int8-quantised cache:
+    reads dequantise against the per-(batch, head) prefill scale, the new
+    token's row is quantised (clipped) into the same scale — halves cache
+    bytes at rest AND per-step read traffic vs bf16.
+    """
+    b = x.shape[0]
+    q, k, v = qkv_project(x, p, cfg)           # (B, 1, H*, hd)
+    # decode positions: (B,) scalar-per-row; for M-RoPE archs the three
+    # position streams coincide during text decoding, so standard RoPE on the
+    # shared stream is exact.
+    posb = jnp.broadcast_to(pos.reshape(-1, 1)[:b], (b, 1))
+    q = apply_rope(q, posb, cfg, theta)
+    k = apply_rope(k, posb, cfg, theta)
+
+    t = k_cache.shape[1]
+    if rolling:  # ring buffer of size `window`
+        slot = cache_len % jnp.maximum(t, 1)
+    else:
+        slot = jnp.minimum(cache_len, t - 1)
+    # NOTE(perf, measured): the DUS form aliases the carried cache inside
+    # the layer loop; a one-hot jnp.where variant was tried and REFUTED —
+    # it materialises a fresh cache per layer (+5 GiB temps on
+    # qwen2-72b decode_32k).  See EXPERIMENTS.md §Perf iteration D2.
+    if k_scale is not None:                    # int8-quantised cache
+        k_row = _quant_row(k[:, 0], k_scale)
+        v_row = _quant_row(v[:, 0], v_scale)
+        k_cache = k_cache.at[:, slot].set(k_row)
+        v_cache = v_cache.at[:, slot].set(v_row)
+        k_eff = k_cache.astype(cdt(cfg)) \
+            * k_scale[:, None, :, None].astype(cdt(cfg))
+        v_eff = v_cache.astype(cdt(cfg)) \
+            * v_scale[:, None, :, None].astype(cdt(cfg))
+    else:
+        k_cache = k_cache.at[:, slot].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[:, slot].set(v[:, 0].astype(v_cache.dtype))
+        k_eff = k_cache.astype(cdt(cfg))
+        v_eff = v_cache.astype(cdt(cfg))
+    k_cache = constrain(k_cache, "batch", "kv_seq", None, None)
+    v_cache = constrain(v_cache, "batch", "kv_seq", None, None)
+
+    scores = _gqa_scores(q, k_eff, cfg).astype(jnp.float32)
+    scores = scores / math.sqrt(cfg.hd)        # (B, Hq, 1, T)
+    ti = jnp.arange(t)
+    if rolling:
+        valid = (ti <= slot) | (cache_len >= t)
+    else:
+        valid = ti <= slot
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = _gqa_out(w.astype(cdt(cfg)), v_eff, cfg)
+    o = o.reshape(b, 1, -1)
+    o = dot(o, p["wo"], cfg)
+    if cfg.attn_out_bias:
+        o = o + p["bo"].astype(o.dtype)
+    return o, k_cache, v_cache
+
+
+def _quant_row(row: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """(B, H, hd) bf16 -> int8 against per-(B, H) scale (clipped)."""
+    q = jnp.round(row.astype(jnp.float32)
+                  / jnp.maximum(scale[:, :, None], 1e-8))
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def quantize_kv(kc: jnp.ndarray, vc: jnp.ndarray):
+    """(L, B, S, H, hd) bf16 caches -> (int8 caches, (L, B, H) scales)."""
+    def one(c):
+        amax = jnp.max(jnp.abs(c.astype(jnp.float32)), axis=(2, 4))
+        scale = jnp.maximum(amax, 1e-8) / 127.0          # (L, B, H)
+        q = jnp.round(c.astype(jnp.float32)
+                      / scale[:, :, None, :, None])
+        return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+    kq, ks = one(kc)
+    vq, vs = one(vc)
+    return kq, vq, ks, vs
+
+
+def cross_attention_decode(x, p, cfg: ArchConfig, k_cache, v_cache):
+    """Decoder cross-attention against precomputed encoder KV (no mask)."""
+    b = x.shape[0]
+    q = _split_heads(dot(x, p["wq"], cfg), cfg.n_heads)
+    scores = _gqa_scores(q, k_cache.astype(cdt(cfg)), cfg).astype(jnp.float32)
+    scores = scores / math.sqrt(cfg.hd)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = _gqa_out(w.astype(cdt(cfg)), v_cache.astype(cdt(cfg)), cfg)
+    o = dot(o.reshape(b, 1, -1), p["wo"], cfg)
+    if cfg.attn_out_bias:
+        o = o + p["bo"].astype(o.dtype)
+    return o
+
+
+# ----------------------------------------------------------------------- mlp
+
+def mlp(x: jnp.ndarray, p: Dict, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(dot(x, p["wg"], cfg)) * dot(x, p["wi"], cfg)
+    elif cfg.mlp == "squared_relu":
+        h = jnp.square(jax.nn.relu(dot(x, p["wi"], cfg)))
+    else:  # gelu
+        h = dot(x, p["wi"], cfg)
+        if cfg.mlp_bias:
+            h = h + p["bi"].astype(h.dtype)
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", None, "ff")
+    o = dot(h, p["wo"], cfg)
+    if cfg.mlp_bias:
+        o = o + p["bo"].astype(o.dtype)
+    return o
+
+
+# ------------------------------------------------------------------- embeds
+
+def embed_tokens(tokens: jnp.ndarray, embed: jnp.ndarray, cfg: ArchConfig
+                 ) -> jnp.ndarray:
+    x = jnp.take(embed, tokens, axis=0).astype(cdt(cfg))
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    return constrain(x, "batch", None, None)
+
+
+def lm_logits(x: jnp.ndarray, params: Dict, cfg: ArchConfig) -> jnp.ndarray:
+    w = params["embed"] if cfg.tied_embeddings else params["lm_head"]
+    if cfg.tied_embeddings:
+        logits = einsum("bsd,vd->bsv", x, w, cfg=cfg)
+    else:
+        logits = dot(x, w, cfg)
+    return constrain(logits.astype(jnp.float32), "batch", None, "vocab")
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, vocab: int
+                  ) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

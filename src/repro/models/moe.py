@@ -1,0 +1,188 @@
+"""Token-choice top-k MoE with *grouped* sort-based capacity dispatch.
+
+Two formulations were measured in the dry-run (EXPERIMENTS.md §Perf):
+
+* **global sort dispatch** (v1): argsort over all T*k assignments + a
+  data-dependent scatter.  Under SPMD with tokens sharded over
+  (``pod``, ``data``) and experts over ``model``, XLA cannot partition a
+  data-dependent scatter whose indices span shards — it *replicates* the
+  token activations per layer (memory 191 s / collective 353 s roofline
+  terms for moonshot train_4k: 100x above compute).
+* **grouped dispatch** (v2, this file): tokens are split into G groups
+  aligned with their (``pod``, ``data``) shard; the sort/scatter runs
+  *within* each group (vmapped, batch dim sharded, zero cross-shard data
+  dependence), producing an (G, E, C_g, d) buffer that is G-sharded and
+  model-replicated.  Expert matmuls contract with E-sharded weights (free
+  local slicing), and the single structured collective is the all-gather
+  of expert outputs over ``model`` before the local combine gather —
+  E*C_g*d*2B per device per layer ~= k*cf*tokens_per_shard*d*2B, the
+  information-theoretic EP volume.
+
+Memory is O(T_g*k*d + E*C_g*d) per device: linear in local tokens.
+
+Shared experts (qwen2-moe) are plain always-on MLPs added to the output.
+Padded experts (60 -> 64 for even EP-16) are real rows in the weight
+tensors whose router logits are masked to -inf, so they never win top-k;
+FLOP accounting uses the unpadded count.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.parallel.ops import top_k_sorted
+from repro.parallel.sharding import constrain, get_rules
+
+
+def router_topk(x: jnp.ndarray, wr: jnp.ndarray, cfg: ArchConfig):
+    """x: (T, d) -> (weights (T,k), ids (T,k)) with padded experts masked."""
+    moe = cfg.moe
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        wr.astype(jnp.float32))
+    if moe.total_experts != moe.num_experts:
+        pad_mask = jnp.arange(moe.total_experts) >= moe.num_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # sort-based top-k: lax.top_k is an SPMD-opaque custom-call that
+    # all-gathers the token batch (see parallel/ops.py).  ids carry no
+    # gradient; weights are re-read from probs through a one-hot einsum so
+    # the router gradient flows with no gather anywhere (this jaxlib's
+    # batched-gather transpose is broken, and one-hot x probs partitions
+    # cleanly besides).
+    _, ids = top_k_sorted(jax.lax.stop_gradient(probs), moe.top_k)
+    onehot = jax.nn.one_hot(ids, moe.total_experts, dtype=probs.dtype)
+    weights = jnp.einsum("tke,te->tk", onehot, probs)
+    weights = weights / jnp.maximum(jnp.sum(weights, -1, keepdims=True), 1e-9)
+    return weights, ids, probs
+
+
+def capacity(tokens: int, cfg: ArchConfig) -> int:
+    moe = cfg.moe
+    c = int(math.ceil(tokens * moe.top_k / moe.total_experts
+                      * moe.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for lane alignment
+
+
+def _num_groups(b: int, s: int) -> int:
+    """Groups = batch-shard count, so per-group dispatch is shard-local."""
+    rules = get_rules()
+    if rules is None:
+        return 1
+    g = rules.mesh_size(rules.table.get("batch"))
+    if g <= 1 or b % g != 0:
+        return 1
+    return g
+
+
+def _dispatch_group(xg: jnp.ndarray, idg: jnp.ndarray, e: int, cap: int,
+                    cdt) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                  jnp.ndarray]:
+    """One group's sort-based dispatch.  xg: (Tg, d), idg: (Tg, k).
+
+    Returns (ex_in (E, C, d), slot (Tg*k,), keep (Tg*k,), inv (Tg*k,)).
+    """
+    tg, k = idg.shape
+    flat_ids = idg.reshape(tg * k)
+    token_idx = jnp.repeat(jnp.arange(tg), k)
+    order = jnp.argsort(flat_ids)                       # stable
+    sorted_ids = flat_ids[order]
+    sorted_tok = token_idx[order]
+    pos = jnp.arange(tg * k)
+    starts = jnp.searchsorted(sorted_ids, jnp.arange(e))
+    rank = pos - starts[sorted_ids]
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_ids * cap + rank, tg * k)  # OOB -> dropped
+
+    buf = jnp.zeros((e * cap + 1, xg.shape[-1]), cdt)
+    buf = buf.at[slot].set(xg[sorted_tok].astype(cdt), mode="drop")
+    ex_in = buf[:-1].reshape(e, cap, xg.shape[-1])
+    inv = jnp.argsort(order)
+    return ex_in, slot, keep, inv
+
+
+def _combine_group(ex_out_flat: jnp.ndarray, slot: jnp.ndarray,
+                   keep: jnp.ndarray, inv: jnp.ndarray, tg: int, k: int
+                   ) -> jnp.ndarray:
+    """Undo one group's dispatch: (E*C, d) -> (Tg, k, d)."""
+    picked = jnp.where(
+        keep[:, None],
+        ex_out_flat[jnp.clip(slot, 0, ex_out_flat.shape[0] - 1)], 0.0)
+    return picked[inv].reshape(tg, k, -1)
+
+
+def moe_mlp(x: jnp.ndarray, p: Dict, cfg: ArchConfig) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d). p holds router + expert + shared weights."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = moe.top_k
+    e = moe.total_experts
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    xt = x.reshape(t, d)
+    weights, ids, probs = router_topk(xt, p["router"], cfg)
+
+    # ---- grouped dispatch (shard-local sort; G = batch-shard count) -------
+    g = _num_groups(b, s)
+    tg = t // g
+    cap = capacity(tg, cfg)
+    xg = xt.reshape(g, tg, d)
+    xg = constrain(xg, "batch", None, None)
+    idg = ids.reshape(g, tg, k)
+    ex_in, slot, keep, inv = jax.vmap(
+        lambda xx, ii: _dispatch_group(xx, ii, e, cap, cdt))(xg, idg)
+    # (G, E, C, d): G over (pod, data); E replicated here — each model-axis
+    # device holds every group's dispatch (dispatch is cheap; compute isn't)
+    ex_in = constrain(ex_in, "batch", None, None, None)
+
+    # ---- expert MLPs (swiglu), E contracted against model-sharded weights --
+    def edot(a, w):
+        # (G, E, C, x) @ (E, x, y) -> (G, E, C, y), batched over E
+        return jax.lax.dot_general(
+            a, w.astype(cdt), (((3,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32).astype(cdt).transpose(
+                1, 0, 2, 3)
+
+    ex_in_e = constrain(ex_in, "batch", "expert", None, None)
+    h = jax.nn.silu(edot(ex_in_e, p["wg"])) * edot(ex_in_e, p["wi"])
+    ex_out = edot(h, p["wo"])                           # (G, E, C, d)
+    # combine gathers across experts -> requires full E per device: the ONE
+    # structured collective (all-gather of E*C*d over ``model``)
+    ex_out = constrain(ex_out, "batch", None, None, None)
+
+    # ---- gather back + combine ---------------------------------------------
+    flat_out = ex_out.reshape(g, e * cap, d)
+    per_assign = jax.vmap(
+        lambda fo, sl, kp, iv: _combine_group(fo, sl, kp, iv, tg, k)
+    )(flat_out, slot, keep, inv)                        # (G, Tg, k, d)
+    wgt = weights.reshape(g, tg, k)
+    # bf16 operands + f32 accumulation: upcasting per_assign (T*k, d) to
+    # f32 doubled the largest combine-side HBM flow (measured -1.8 TB/dev
+    # on moonshot train_4k)
+    out = jnp.einsum("gtk,gtkd->gtd", wgt.astype(cdt), per_assign,
+                     preferred_element_type=jnp.float32).astype(cdt)
+    out = out.reshape(t, d)
+
+    # ---- shared experts (always-on) ----------------------------------------
+    if moe.shared_experts:
+        sh = jax.nn.silu(xt.astype(cdt) @ p["shared_wg"].astype(cdt)) \
+            * (xt.astype(cdt) @ p["shared_wi"].astype(cdt))
+        out = out + (sh @ p["shared_wo"].astype(cdt))
+
+    return out.reshape(b, s, d)
+
+
+def aux_loss(probs: jnp.ndarray, ids: jnp.ndarray, cfg: ArchConfig
+             ) -> jnp.ndarray:
+    """Switch-style load-balancing loss (mean prob * mean assignment rate)."""
+    moe = cfg.moe
+    e = moe.total_experts
+    assign = jnp.zeros((e,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    assign = assign / jnp.maximum(jnp.sum(assign), 1.0)
+    imp = jnp.mean(probs, axis=0)
+    return e * jnp.sum(assign * imp)

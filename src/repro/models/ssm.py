@@ -1,0 +1,324 @@
+"""Attention-free sequence mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are implemented twice:
+
+* **chunked parallel form** for train/prefill — sequence split into chunks of
+  ``cfg.ssm.chunk``; within-chunk interactions are dense (MXU-friendly
+  (c x c) / (hd x state) matmuls), across-chunk state is carried by one
+  ``lax.scan`` over chunks.  O(S * c) work, O(S/c) scan steps.
+* **recurrent form** for decode — O(1) state per layer, independent of
+  context length.  This is what makes ``long_500k`` a constant-memory cell
+  for rwkv6-3b / zamba2-7b.
+
+Conventions: inputs are (B, S, d); params are per-layer dicts (stacked along
+a leading L axis by the caller and scanned).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.parallel.sharding import constrain
+
+
+def _cdt(cfg: ArchConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ============================================================= Mamba2 (SSD)
+
+def mamba2_dims(cfg: ArchConfig) -> Dict[str, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return dict(d_inner=d_inner, n_heads=n_heads, d_state=s.d_state,
+                head_dim=s.head_dim, n_groups=s.n_groups, d_conv=s.d_conv)
+
+
+def _ssd_chunk_scan(xh, dt, a_log, b, c, d_skip, chunk: int):
+    """Chunked SSD.  xh: (B,S,H,P), dt: (B,S,H), a_log: (H,) <=0 decay,
+    b,c: (B,S,G,N) with G groups broadcast over heads.  Returns (B,S,H,P).
+
+    Scalar-per-head decay: within a chunk, y = (C B^T ∘ L) x (causal, decay
+    weighted) + decay^t * C state_in;  state_out = decay^c * state_in +
+    sum_t decay^(c-t) dt_t B_t x_t.
+    """
+    bsz, s, h, p = xh.shape
+    g, n = b.shape[2], b.shape[3]
+    s_orig = s
+    pad = (-s) % chunk                      # zero-pad: dt=0 => no state change
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xh, dt, b, c = zp(xh), zp(dt), zp(b), zp(c)
+        s += pad
+    nc = s // chunk
+    rep = h // g
+
+    xc = xh.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, g, n)
+    cc = c.reshape(bsz, nc, chunk, g, n)
+
+    # per-step log decay: dA = dt * a_log  (a_log < 0)
+    da = dtc * a_log[None, None, None, :]            # (B,nc,c,H)
+    da_cum = jnp.cumsum(da, axis=2)                  # inclusive cumsum
+
+    def body(state, inp):
+        xk, dtk, bk, ck, dak, dacum = inp            # leading axis B
+        # intra-chunk: L[t,u] = exp(dacum_t - dacum_u) for u <= t
+        rel = dacum[:, :, None, :] - dacum[:, None, :, :]   # (B,c,c,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        l_mat = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+        # scores: C_t . B_u  (group-broadcast over heads)
+        bk_h = jnp.repeat(bk, rep, axis=2)           # (B,c,H,N)
+        ck_h = jnp.repeat(ck, rep, axis=2)
+        scores = jnp.einsum("bthn,buhn->btuh", ck_h, bk_h) * l_mat
+        y_intra = jnp.einsum("btuh,buh,buhp->bthp", scores, dtk, xk)
+        # contribution of carried state: y += exp(dacum_t) * C_t . state
+        y_state = jnp.einsum("bthn,bhpn->bthp", ck_h, state) \
+            * jnp.exp(dacum)[..., None]
+        # state update: state' = exp(da_total) state + sum_u exp(dacum_c - dacum_u) dt_u B_u x_u
+        da_tot = dacum[:, -1]                        # (B,H)
+        w = jnp.exp(da_tot[:, None, :] - dacum)      # (B,c,H)
+        upd = jnp.einsum("buh,buh,buhn,buhp->bhpn", w, dtk, bk_h, xk)
+        state = jnp.exp(da_tot)[:, :, None, None] * state + upd
+        return state, (y_intra + y_state)
+
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(xc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dtc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(bc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(cc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(da, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(da_cum, 1, 0).astype(jnp.float32))
+    final, ys = jax.lax.scan(body, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)
+    y = y + d_skip[None, None, :, None] * xh.astype(jnp.float32)
+    return y[:, :s_orig], final
+
+
+def mamba2_train(x: jnp.ndarray, p: Dict, cfg: ArchConfig,
+                 return_state: bool = False):
+    """Full-sequence Mamba2 block (train / prefill). x: (B, S, d)."""
+    dims = mamba2_dims(cfg)
+    bsz, s, d = x.shape
+    di, h, n, hp = (dims["d_inner"], dims["n_heads"], dims["d_state"],
+                    dims["head_dim"])
+    g = dims["n_groups"]
+    cdt = _cdt(cfg)
+
+    xc_ = x.astype(cdt)
+    z = (xc_ @ p["in_z"].astype(cdt)).astype(jnp.float32)
+    xin = (xc_ @ p["in_x"].astype(cdt)).astype(jnp.float32)
+    bc = (xc_ @ p["in_bc"].astype(cdt)).astype(jnp.float32)
+    dt = (xc_ @ p["in_dt"].astype(cdt)).astype(jnp.float32)
+    b, c = jnp.split(bc, 2, axis=-1)
+    # causal depthwise conv over (xin) — kernel (K, di)
+    k = cfg.ssm.d_conv
+    xpad = jnp.pad(xin, ((0, 0), (k - 1, 0), (0, 0)))
+    xconv = sum(xpad[:, i:i + s] * p["conv_w"][i][None, None, :]
+                for i in range(k)) + p["conv_b"][None, None, :]
+    xconv = jax.nn.silu(xconv)
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None, :])     # (B,S,H)
+    a_log = -jnp.exp(p["a_log"])                                # (H,) < 0
+
+    xh = xconv.reshape(bsz, s, h, hp)
+    bg = b.reshape(bsz, s, g, n)
+    cg = c.reshape(bsz, s, g, n)
+    y, final = _ssd_chunk_scan(xh, dt, a_log, bg, cg, p["d_skip"],
+                               cfg.ssm.chunk)
+    y = y.reshape(bsz, s, di)
+    # gated rmsnorm (mamba2 norm-before-out)
+    yn = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6)
+    y = yn * p["norm_scale"][None, None, :] * jax.nn.silu(z)
+    out = (y.astype(cdt) @ p["out_proj"].astype(cdt)).astype(x.dtype)
+    if return_state:
+        return out, {"ssd": final, "conv": xin[:, s - (k - 1):]}
+    return out
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    dims = mamba2_dims(cfg)
+    return {
+        "ssd": jnp.zeros((batch, dims["n_heads"], dims["head_dim"],
+                          dims["d_state"]), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, dims["d_inner"]),
+                          jnp.float32),
+    }
+
+
+def mamba2_decode(x: jnp.ndarray, p: Dict, cfg: ArchConfig,
+                  state: Dict[str, jnp.ndarray]
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token recurrent step. x: (B, 1, d)."""
+    dims = mamba2_dims(cfg)
+    bsz = x.shape[0]
+    di, h, n, hp = (dims["d_inner"], dims["n_heads"], dims["d_state"],
+                    dims["head_dim"])
+    g = dims["n_groups"]
+    cdt = _cdt(cfg)
+
+    xc_ = x[:, 0].astype(cdt)
+    z = (xc_ @ p["in_z"].astype(cdt)).astype(jnp.float32)
+    xin = (xc_ @ p["in_x"].astype(cdt)).astype(jnp.float32)
+    bc = (xc_ @ p["in_bc"].astype(cdt)).astype(jnp.float32)
+    dt = (xc_ @ p["in_dt"].astype(cdt)).astype(jnp.float32)
+    b, c = jnp.split(bc, 2, axis=-1)
+    conv_hist = jnp.concatenate([state["conv"], xin[:, None, :]], axis=1)
+    k = cfg.ssm.d_conv
+    xconv = sum(conv_hist[:, i] * p["conv_w"][i][None, :] for i in range(k)) \
+        + p["conv_b"][None, :]
+    xconv = jax.nn.silu(xconv)
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, :])            # (B,H)
+    a_log = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a_log[None, :])                            # (B,H)
+
+    xh = xconv.reshape(bsz, h, hp)
+    bh = jnp.repeat(b.reshape(bsz, g, n), h // g, axis=1)
+    ch = jnp.repeat(c.reshape(bsz, g, n), h // g, axis=1)
+    new_ssd = da[:, :, None, None] * state["ssd"] \
+        + jnp.einsum("bh,bhp,bhn->bhpn", dt, xh, bh)
+    y = jnp.einsum("bhn,bhpn->bhp", ch, new_ssd) \
+        + p["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, di)
+    yn = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6)
+    y = yn * p["norm_scale"][None, :] * jax.nn.silu(z)
+    out = (y.astype(cdt) @ p["out_proj"].astype(cdt)).astype(x.dtype)
+    return out[:, None, :], {"ssd": new_ssd, "conv": conv_hist[:, 1:]}
+
+
+# ============================================================ RWKV6 (Finch)
+
+def rwkv6_dims(cfg: ArchConfig) -> Dict[str, int]:
+    hd = cfg.ssm.head_dim
+    return dict(n_heads=cfg.d_model // hd, head_dim=hd)
+
+
+def _token_shift(x: jnp.ndarray, prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """x_{t-1} stream; ``prev`` (B, d) seeds position -1 (decode carries it)."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def _rwkv_proj(x, xprev, mix, w, lora_a=None, lora_b=None):
+    """RWKV6 data-dependent interpolation + projection."""
+    xm = x + (xprev - x) * mix[None, None, :]
+    out = xm @ w
+    if lora_a is not None:
+        out = out + jnp.tanh(xm @ lora_a) @ lora_b
+    return out
+
+
+def _wkv6_chunk_scan(r, k, v, w_log, u, chunk: int):
+    """Chunked WKV6.  r,k,v: (B,S,H,hd); w_log: (B,S,H,hd) <= 0 log-decay
+    (data-dependent, per-channel); u: (H, hd) bonus.  Returns (B,S,H,hd).
+
+    State S_h ∈ R^{hd x hd}: S_t = diag(exp(w_log_t)) S_{t-1} + k_t v_t^T,
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T).
+    """
+    bsz, s, h, hd = r.shape
+    s_orig = s
+    pad = (-s) % chunk          # zero-pad: w_log=0, k=0 => state preserved
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, w_log = zp(r), zp(k), zp(v), zp(w_log)
+        s += pad
+    nc = s // chunk
+
+    def resh(x):
+        return jnp.moveaxis(x.reshape(bsz, nc, chunk, h, hd), 1, 0)
+
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w_log)
+
+    def body(state, inp):
+        rk, kk, vk, wk = inp                       # (B,c,H,hd)
+        wcum = jnp.cumsum(wk, axis=1)              # inclusive
+        # o_t = r_t diag(exp(wcum_{t-1})) state  (decay BEFORE t's update)
+        wcum_excl = wcum - wk
+        y_state = jnp.einsum("bthd,bhde->bthe", rk * jnp.exp(wcum_excl), state)
+        # intra-chunk: u<t term with decay prod_{j=u+1..t-1} -> exp(wcum_excl_t - wcum_u)
+        rel = wcum_excl[:, :, None] - wcum[:, None, :]      # (B,t,u,H,hd)
+        tri_lt = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+        decay = jnp.where(tri_lt[None, :, :, None, None], jnp.exp(rel), 0.0)
+        att = jnp.einsum("bthd,btuhd,buhd->btuh", rk, decay, kk)
+        # diagonal (current token) bonus term
+        diag = jnp.einsum("bthd,hd,bthd->bth", rk, u, kk)
+        y_intra = jnp.einsum("btuh,buhe->bthe", att, vk) \
+            + diag[..., None] * vk
+        # state update
+        w_tot = wcum[:, -1]                        # (B,H,hd)
+        wrem = w_tot[:, None] - wcum               # decay from u+1..c
+        kw = kk * jnp.exp(wrem)
+        state = jnp.exp(w_tot)[..., None] * state \
+            + jnp.einsum("buhd,buhe->bhde", kw, vk)
+        return state, y_state + y_intra
+
+    state0 = jnp.zeros((bsz, h, hd, hd), jnp.float32)
+    final, ys = jax.lax.scan(body, state0,
+                             (rc.astype(jnp.float32), kc.astype(jnp.float32),
+                              vc.astype(jnp.float32), wc.astype(jnp.float32)))
+    return jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, hd)[:, :s_orig], final
+
+
+def rwkv6_time_mix(x: jnp.ndarray, p: Dict, cfg: ArchConfig,
+                   prev_x: jnp.ndarray | None = None,
+                   state: jnp.ndarray | None = None):
+    """RWKV6 attention (time-mix).  Train mode when state is None."""
+    dims = rwkv6_dims(cfg)
+    h, hd = dims["n_heads"], dims["head_dim"]
+    bsz, s, d = x.shape
+    xf = x.astype(jnp.float32)
+    xprev = _token_shift(xf, prev_x)
+
+    r = _rwkv_proj(xf, xprev, p["mix_r"], p["wr"])
+    k = _rwkv_proj(xf, xprev, p["mix_k"], p["wk"])
+    v = _rwkv_proj(xf, xprev, p["mix_v"], p["wv"])
+    g = _rwkv_proj(xf, xprev, p["mix_g"], p["wg"])
+    # data-dependent decay (low-rank): w = exp(-exp(base + lora))
+    wl = _rwkv_proj(xf, xprev, p["mix_w"], jnp.zeros((d, d), jnp.float32),
+                    p["w_lora_a"], p["w_lora_b"]) + p["w_base"][None, None, :]
+    w_log = -jnp.exp(wl)                                # (B,S,d) <= 0
+
+    def heads(t):
+        return t.reshape(bsz, s, h, hd)
+
+    if state is None:
+        y, new_state = _wkv6_chunk_scan(heads(r), heads(k), heads(v),
+                                        heads(w_log), p["u"].reshape(h, hd),
+                                        cfg.ssm.chunk)
+    else:
+        rh, kh, vh = heads(r)[:, 0], heads(k)[:, 0], heads(v)[:, 0]
+        wh = jnp.exp(heads(w_log)[:, 0])                 # (B,H,hd)
+        u = p["u"].reshape(h, hd)
+        kv = jnp.einsum("bhd,bhe->bhde", kh, vh)
+        y = jnp.einsum("bhd,bhde->bhe", rh, state + u[None, :, :, None] * kv)
+        new_state = wh[..., None] * state + kv
+        y = y[:, None]                                   # (B,1,H,hd)
+
+    # group-norm over heads + output gate
+    yf = y.reshape(bsz, -1, h, hd)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + 64e-5)
+    yn = yn * p["ln_x_scale"].reshape(1, 1, h, hd) \
+        + p["ln_x_bias"].reshape(1, 1, h, hd)
+    out = (yn.reshape(bsz, -1, d) * jax.nn.silu(g)) @ p["wo"]
+    return out.astype(x.dtype), new_state, xf[:, -1]
+
+
+def rwkv6_channel_mix(x: jnp.ndarray, p: Dict, cfg: ArchConfig,
+                      prev_x: jnp.ndarray | None = None):
+    """RWKV6 FFN (channel-mix) with token shift + squared relu."""
+    xf = x.astype(jnp.float32)
+    xprev = _token_shift(xf, prev_x)
+    xk = xf + (xprev - xf) * p["mix_fk"][None, None, :]
+    xr = xf + (xprev - xf) * p["mix_fr"][None, None, :]
+    kk = jnp.square(jax.nn.relu(xk @ p["fk"]))
+    out = jax.nn.sigmoid(xr @ p["fr"]) * (kk @ p["fv"])
+    return out.astype(x.dtype), xf[:, -1]

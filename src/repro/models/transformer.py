@@ -1,0 +1,840 @@
+"""Forward passes and step functions for all ten assigned architectures.
+
+One scanned-block formulation per family:
+
+* dense / moe / vlm — pre-norm attention + (MLP | MoE), ``lax.scan`` over a
+  stacked (L, ...) parameter tree; per-layer window/theta are *scanned
+  arrays* so gemma3's 5:1 local:global pattern shares one compiled body.
+* ssm (rwkv6 / mamba2) — token-shift / SSD blocks, chunked for train,
+  O(1)-state recurrence for decode.
+* hybrid (zamba2) — grouped scan: (k-1) scanned mamba layers then the ONE
+  weight-shared attention block per group (weight reuse = zamba signature).
+* audio (whisper) — encoder stack (non-causal) + decoder stack with
+  cross-attention; conv frontend stubbed (frames arrive pre-embedded).
+
+Memory discipline: attention goes through ``flash_attention`` (blocked
+online softmax, recompute-backward) whenever S*T is large; layer scan bodies
+are ``jax.checkpoint``-ed when ``cfg.remat == "full"``; ``train_step``
+accumulates gradients over ``accum`` microbatches with a ``lax.scan`` so
+activation peak is one microbatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ArchConfig
+from repro.models.flash import flash_attention, reference_attention
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.parallel.sharding import constrain
+
+FLASH_MIN = 2048 * 2048   # S*T above which the blocked path is used
+BLOCK = 512
+
+
+def _use_flash(s: int, t: int, impl: str) -> bool:
+    if impl == "flash":
+        return True
+    if impl == "naive":
+        return False
+    return (s * t >= FLASH_MIN) and s % BLOCK == 0 and t % BLOCK == 0
+
+
+def _cdt(cfg: ArchConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def sinusoid_pos(seq: int, d: int) -> jnp.ndarray:
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    tab = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(tab, jnp.float32)
+
+
+def sinusoid_row(pos, d: int) -> jnp.ndarray:
+    """Single sinusoid row at (traced) scalar position ``pos``."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+# ------------------------------------------------------------ attention wrap
+
+def attention_full(x, p, cfg: ArchConfig, pos, window, theta, *,
+                   impl: str = "auto", schedule: str = "dense",
+                   causal: bool = True, kv_x=None, kv_valid: int = 10 ** 9):
+    """Self- or cross-attention over a full sequence."""
+    b, s, _ = x.shape
+    if kv_x is None:
+        q, k, v = L.qkv_project(x, p, cfg)
+        if cfg.rope_pct > 0:
+            q = L.apply_rope(q, pos, cfg, theta)
+            k = L.apply_rope(k, pos, cfg, theta)
+        t = s
+    else:
+        q = L._split_heads(L.dot(x, p["wq"], cfg), cfg.n_heads)
+        k = L._split_heads(L.dot(kv_x, p["wk"], cfg), cfg.n_kv_heads)
+        v = L._split_heads(L.dot(kv_x, p["wv"], cfg), cfg.n_kv_heads)
+        t = kv_x.shape[1]
+        causal = False
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    if _use_flash(s, t, impl):
+        o = flash_attention(q, k, v, causal, schedule, BLOCK, BLOCK,
+                            window, kv_valid, 0)
+    else:
+        o = reference_attention(q, k, v, causal, window, kv_valid, 0)
+    o = o.reshape(b, s, -1).astype(_cdt(cfg))
+    o = L.dot(o, p["wo"], cfg)
+    if cfg.attn_out_bias:
+        o = o + p["bo"].astype(o.dtype)
+    return o
+
+
+# -------------------------------------------------------------- block bodies
+
+def dense_block(x, lp, cfg: ArchConfig, pos, window, theta, impl, schedule):
+    h = L.norm(x, lp["ln1"], cfg)
+    a = attention_full(h, lp["attn"], cfg, pos, window, theta,
+                       impl=impl, schedule=schedule)
+    if cfg.sandwich_norm:
+        a = L.norm(a, lp["ln1b"], cfg)
+    x = x + a
+    h = L.norm(x, lp["ln2"], cfg)
+    if cfg.moe is not None:
+        m = moe_lib.moe_mlp(h, lp["moe"], cfg)
+    else:
+        m = L.mlp(h, lp["mlp"], cfg)
+    if cfg.sandwich_norm:
+        m = L.norm(m, lp["ln2b"], cfg)
+    return x + m
+
+
+def rwkv_block(x, lp, cfg: ArchConfig):
+    h = L.norm(x, lp["ln1"], cfg)
+    a, _, _ = ssm_lib.rwkv6_time_mix(h, lp["rwkv"], cfg)
+    x = x + a
+    h = L.norm(x, lp["ln2"], cfg)
+    m, _ = ssm_lib.rwkv6_channel_mix(h, lp["rwkv"], cfg)
+    return x + m
+
+
+def mamba_block(x, lp, cfg: ArchConfig):
+    h = L.norm(x, lp["ln1"], cfg)
+    return x + ssm_lib.mamba2_train(h, lp["mamba"], cfg)
+
+
+def shared_attn_block(x, sp, cfg: ArchConfig, pos, impl, schedule):
+    h = L.norm(x, sp["ln1"], cfg)
+    x = x + attention_full(h, sp["attn"], cfg, pos, 0, cfg.rope_theta,
+                           impl=impl, schedule=schedule)
+    h = L.norm(x, sp["ln2"], cfg)
+    return x + L.mlp(h, sp["mlp"], cfg)
+
+
+# --------------------------------------------------------------- layer scans
+
+def _maybe_ckpt(fn, cfg: ArchConfig):
+    return jax.checkpoint(fn) if cfg.remat == "full" else fn
+
+
+def _layer_meta(cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-layer (window, rope_theta) arrays for the scanned stack."""
+    windows = np.asarray(cfg.windows(), np.int32)
+    thetas = np.full(cfg.n_layers, cfg.rope_theta, np.float32)
+    if cfg.global_rope_theta:
+        thetas = np.where(windows == 0, cfg.global_rope_theta, thetas)
+    return jnp.asarray(windows), jnp.asarray(thetas)
+
+
+def forward_hidden(params, tokens, cfg: ArchConfig, *, pos=None,
+                   patches=None, frames=None, impl="auto",
+                   schedule="dense") -> jnp.ndarray:
+    """Token stream -> final hidden states (pre final-norm)."""
+    if cfg.family == "audio":
+        enc = whisper_encode(params, frames, cfg, impl, schedule)
+        return whisper_decoder_hidden(params, tokens, enc, cfg, impl,
+                                      schedule)
+
+    x = L.embed_tokens(tokens, params["embed"], cfg)
+    if cfg.vlm is not None and patches is not None:
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        body = _maybe_ckpt(lambda c, lp: (rwkv_block(c, lp, cfg), None), cfg)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x
+
+    if cfg.family == "ssm" and cfg.ssm.kind == "mamba2":
+        body = _maybe_ckpt(lambda c, lp: (mamba_block(c, lp, cfg), None), cfg)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x
+
+    if cfg.family == "hybrid":
+        return zamba_hidden(params, x, cfg, pos, impl, schedule)
+
+    windows, thetas = _layer_meta(cfg)
+
+    def body(c, inp):
+        lp, w, th = inp
+        return dense_block(c, lp, cfg, pos, w, th, impl, schedule), None
+
+    body = _maybe_ckpt(body, cfg)
+    x, _ = jax.lax.scan(body, x, (params["layers"], windows, thetas))
+    return x
+
+
+def zamba_hidden(params, x, cfg: ArchConfig, pos, impl, schedule):
+    k = cfg.hybrid_attn_every
+    n_attn = cfg.n_layers // k
+    per_group = k - 1
+    grouped = n_attn * per_group
+    mam = params["layers"]
+    head = jax.tree.map(
+        lambda a: a[:grouped].reshape((n_attn, per_group) + a.shape[1:]), mam)
+    tail = jax.tree.map(lambda a: a[grouped:], mam)
+    shared = params["shared_attn"]
+
+    inner = lambda c, lp: (mamba_block(c, lp, cfg), None)
+
+    def group_body(c, glp):
+        c, _ = jax.lax.scan(inner, c, glp)
+        c = shared_attn_block(c, shared, cfg, pos, impl, schedule)
+        return c, None
+
+    x, _ = jax.lax.scan(_maybe_ckpt(group_body, cfg), x, head)
+    x, _ = jax.lax.scan(_maybe_ckpt(inner, cfg), x, tail)
+    return x
+
+
+# ------------------------------------------------------------------ whisper
+
+def _enc_pad(cfg: ArchConfig) -> int:
+    es = cfg.encdec.enc_seq
+    return -(-es // BLOCK) * BLOCK if es >= BLOCK else es
+
+
+def whisper_encode(params, frames, cfg: ArchConfig, impl="auto",
+                   schedule="dense") -> jnp.ndarray:
+    """frames: (B, enc_seq, d) pre-embedded (conv frontend stub)."""
+    b, es, d = frames.shape
+    pad = _enc_pad(cfg) - es
+    x = frames.astype(_cdt(cfg)) + sinusoid_pos(es, d)[None].astype(_cdt(cfg))
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], (b, x.shape[1]))
+
+    def body(c, lp):
+        h = L.norm(c, lp["ln1"], cfg)
+        a = attention_full(h, lp["attn"], cfg, pos, 0, cfg.rope_theta,
+                           impl=impl, schedule=schedule, causal=False,
+                           kv_valid=es)
+        c = c + a
+        h = L.norm(c, lp["ln2"], cfg)
+        return c + L.mlp(h, lp["mlp"], cfg), None
+
+    x, _ = jax.lax.scan(_maybe_ckpt(body, cfg), x, params["enc_layers"])
+    x = L.norm(x, params["enc_final_norm"], cfg)
+    return x[:, :es]
+
+
+def whisper_decoder_hidden(params, tokens, enc, cfg: ArchConfig,
+                           impl="auto", schedule="dense") -> jnp.ndarray:
+    b, s = tokens.shape
+    x = L.embed_tokens(tokens, params["embed"], cfg)
+    x = x + sinusoid_pos(s, cfg.d_model)[None].astype(x.dtype)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    es = enc.shape[1]
+    pad = _enc_pad(cfg) - es
+    enc_p = jnp.pad(enc, ((0, 0), (0, pad), (0, 0))) if pad else enc
+
+    def body(c, lp):
+        h = L.norm(c, lp["ln1"], cfg)
+        c = c + attention_full(h, lp["attn"], cfg, pos, 0, cfg.rope_theta,
+                               impl=impl, schedule=schedule)
+        h = L.norm(c, lp["ln2"], cfg)
+        c = c + attention_full(h, lp["cross"], cfg, pos, 0, cfg.rope_theta,
+                               impl=impl, schedule=schedule, kv_x=enc_p,
+                               kv_valid=es)
+        h = L.norm(c, lp["ln3"], cfg)
+        return c + L.mlp(h, lp["mlp"], cfg), None
+
+    x, _ = jax.lax.scan(_maybe_ckpt(body, cfg), x, params["layers"])
+    return x
+
+
+# --------------------------------------------------------------------- loss
+
+def masked_cross_entropy(logits, labels, vocab: int,
+                         mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    if logits.shape[-1] > vocab:
+        pad = jnp.arange(logits.shape[-1]) >= vocab
+        logits = jnp.where(pad[None, None], -1e30, logits)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
+            impl="auto", schedule="dense") -> jnp.ndarray:
+    h = forward_hidden(params, batch["tokens"], cfg,
+                       pos=batch.get("pos"), patches=batch.get("patches"),
+                       frames=batch.get("frames"), impl=impl,
+                       schedule=schedule)
+    if cfg.vlm is not None and "patches" in batch:
+        h = h[:, batch["patches"].shape[1]:]       # loss on text positions
+    h = L.norm(h, params["final_norm"], cfg)
+    logits = L.lm_logits(h, params, cfg)
+    return masked_cross_entropy(logits, batch["labels"], cfg.vocab,
+                                batch.get("loss_mask"))
+
+
+# --------------------------------------------------------------- train step
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, accum: int = 1,
+                    impl="auto", schedule="dense"):
+    """Returns train_step(params, opt_state, batch) -> (params', opt', metrics).
+
+    ``accum`` splits the (already data-sharded) global batch into sequential
+    microbatches via ``lax.scan`` — activation memory peaks at 1/accum of
+    the naive step; gradients accumulate in f32 shards (same sharding as
+    params, i.e. reduce-scattered under FSDP).
+    """
+    sched = cosine_schedule(opt_cfg.warmup, opt_cfg.total_steps,
+                            opt_cfg.min_lr_frac)
+
+    def lfn(params, mb):
+        return loss_fn(params, mb, cfg, impl, schedule)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(lfn)(params, batch)
+        else:
+            def re(x):
+                mb = x.shape[0] // accum
+                y = x.reshape((accum, mb) + x.shape[1:])
+                return y
+
+            mbs = jax.tree.map(re, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(lfn)(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gsum, g)
+                return (gsum, lsum + l), None
+
+            (grads, loss), _ = jax.lax.scan(acc, (g0, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  opt_cfg, sched)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ----------------------------------------------------------------- caches
+
+def cache_shapes(cfg: ArchConfig, batch: int, cache_len: int
+                 ) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """name -> (shape, dtype) for the decode state of one model."""
+    hk, hd, d = cfg.n_kv_heads, cfg.hd, cfg.d_model
+    bf, f32 = jnp.bfloat16, jnp.float32
+    out: Dict[str, Tuple[Tuple[int, ...], Any]] = {}
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        dims = ssm_lib.rwkv6_dims(cfg)
+        h, p = dims["n_heads"], dims["head_dim"]
+        out["wkv"] = ((cfg.n_layers, batch, h, p, p), f32)
+        out["att_x"] = ((cfg.n_layers, batch, d), f32)
+        out["ffn_x"] = ((cfg.n_layers, batch, d), f32)
+        return out
+    if cfg.family == "ssm" and cfg.ssm.kind == "mamba2":
+        dims = ssm_lib.mamba2_dims(cfg)
+        out["ssd"] = ((cfg.n_layers, batch, dims["n_heads"],
+                       dims["head_dim"], dims["d_state"]), f32)
+        out["conv"] = ((cfg.n_layers, batch, cfg.ssm.d_conv - 1,
+                        dims["d_inner"]), f32)
+        return out
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        n_attn = cfg.n_layers // k
+        n_mamba = cfg.n_layers - n_attn
+        dims = ssm_lib.mamba2_dims(cfg)
+        out["ssd"] = ((n_mamba, batch, dims["n_heads"], dims["head_dim"],
+                       dims["d_state"]), f32)
+        out["conv"] = ((n_mamba, batch, cfg.ssm.d_conv - 1,
+                        dims["d_inner"]), f32)
+        out["attn_k"] = ((n_attn, batch, cache_len, hk, hd), bf)
+        out["attn_v"] = ((n_attn, batch, cache_len, hk, hd), bf)
+        return out
+    if cfg.family == "audio":
+        es = cfg.encdec.enc_seq
+        out["self_k"] = ((cfg.n_layers, batch, cache_len, hk, hd), bf)
+        out["self_v"] = ((cfg.n_layers, batch, cache_len, hk, hd), bf)
+        out["cross_k"] = ((cfg.n_layers, batch, es, hk, hd), bf)
+        out["cross_v"] = ((cfg.n_layers, batch, es, hk, hd), bf)
+        return out
+    windows = cfg.windows()
+    if any(w > 0 for w in windows):      # gemma3: ring-buffer local layers
+        n_local = sum(1 for w in windows if w > 0)
+        n_global = cfg.n_layers - n_local
+        w = max(w for w in windows if w > 0)
+        out["local_k"] = ((n_local, batch, min(w, cache_len), hk, hd), bf)
+        out["local_v"] = ((n_local, batch, min(w, cache_len), hk, hd), bf)
+        out["global_k"] = ((n_global, batch, cache_len, hk, hd), bf)
+        out["global_v"] = ((n_global, batch, cache_len, hk, hd), bf)
+        return out
+    if cfg.kv_quant:
+        out["k"] = ((cfg.n_layers, batch, cache_len, hk, hd), jnp.int8)
+        out["v"] = ((cfg.n_layers, batch, cache_len, hk, hd), jnp.int8)
+        out["k_scale"] = ((cfg.n_layers, batch, hk), f32)
+        out["v_scale"] = ((cfg.n_layers, batch, hk), f32)
+        return out
+    out["k"] = ((cfg.n_layers, batch, cache_len, hk, hd), bf)
+    out["v"] = ((cfg.n_layers, batch, cache_len, hk, hd), bf)
+    return out
+
+
+def init_caches(cfg: ArchConfig, batch: int, cache_len: int,
+                abstract: bool = False) -> Dict[str, Any]:
+    shapes = cache_shapes(cfg, batch, cache_len)
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in shapes.items()}
+    return {k: jnp.zeros(s, dt) for k, (s, dt) in shapes.items()}
+
+
+def cache_axes(cfg: ArchConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    """Logical axes for each cache entry (KV seq sharded over ``model``)."""
+    shapes = cache_shapes(cfg, 2, 4)
+    out: Dict[str, Tuple[Optional[str], ...]] = {}
+    for k, (shape, _) in shapes.items():
+        if k in ("ssd", "conv", "wkv", "att_x", "ffn_x"):
+            out[k] = (None, "batch") + (None,) * (len(shape) - 2)
+        elif k.endswith("_scale"):
+            out[k] = (None, "batch", None)
+        else:
+            out[k] = (None, "batch", "kv_seq", None, None)
+    return out
+
+
+# -------------------------------------------------------------- decode step
+
+def decode_step(params, caches, token, cache_len, cfg: ArchConfig,
+                enc: Optional[jnp.ndarray] = None):
+    """One-token decode. token: (B, 1) int32; cache_len: scalar int32.
+
+    Returns (logits (B, V) f32, new_caches).
+    """
+    b = token.shape[0]
+    x = L.embed_tokens(token, params["embed"], cfg)
+    posb = jnp.full((b,), cache_len, jnp.int32)
+    new_caches = dict(caches)
+
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        def body(c, inp):
+            lp, wkv, ax, fx = inp
+            h = L.norm(c, lp["ln1"], cfg)
+            a, new_wkv, new_ax = ssm_lib.rwkv6_time_mix(
+                h, lp["rwkv"], cfg, prev_x=ax, state=wkv)
+            c = c + a
+            h = L.norm(c, lp["ln2"], cfg)
+            m, new_fx = ssm_lib.rwkv6_channel_mix(h, lp["rwkv"], cfg,
+                                                  prev_x=fx)
+            return c + m, (new_wkv, new_ax, new_fx)
+
+        x, (wkv, ax, fx) = jax.lax.scan(
+            body, x, (params["layers"], caches["wkv"], caches["att_x"],
+                      caches["ffn_x"]))
+        new_caches = {"wkv": wkv, "att_x": ax, "ffn_x": fx}
+
+    elif cfg.family == "ssm" and cfg.ssm.kind == "mamba2":
+        def body(c, inp):
+            lp, ssd, conv = inp
+            h = L.norm(c, lp["ln1"], cfg)
+            a, st = ssm_lib.mamba2_decode(h, lp["mamba"], cfg,
+                                          {"ssd": ssd, "conv": conv})
+            return c + a, (st["ssd"], st["conv"])
+
+        x, (ssd, conv) = jax.lax.scan(
+            body, x, (params["layers"], caches["ssd"], caches["conv"]))
+        new_caches = {"ssd": ssd, "conv": conv}
+
+    elif cfg.family == "hybrid":
+        x, new_caches = _zamba_decode(params, caches, x, posb, cache_len, cfg)
+
+    elif cfg.family == "audio":
+        # absolute (sinusoidal) positions: add the row at position cache_len
+        x = x + sinusoid_row(cache_len, cfg.d_model)[None, None].astype(x.dtype)
+
+        def body(c, inp):
+            lp, sk, sv, ck, cv = inp
+            h = L.norm(c, lp["ln1"], cfg)
+            a, sk, sv = L.attention_decode(h, lp["attn"], cfg, sk, sv,
+                                           posb, cache_len)
+            c = c + a
+            h = L.norm(c, lp["ln2"], cfg)
+            c = c + L.cross_attention_decode(h, lp["cross"], cfg, ck, cv)
+            h = L.norm(c, lp["ln3"], cfg)
+            return c + L.mlp(h, lp["mlp"], cfg), (sk, sv)
+
+        x, (sk, sv) = jax.lax.scan(
+            body, x, (params["layers"], caches["self_k"], caches["self_v"],
+                      caches["cross_k"], caches["cross_v"]))
+        new_caches = dict(caches, self_k=sk, self_v=sv)
+
+    elif any(w > 0 for w in cfg.windows()):    # gemma3, unrolled mixed stack
+        windows = np.asarray(cfg.windows(), np.int64)
+        thetas = np.full(cfg.n_layers, cfg.rope_theta, np.float64)
+        if cfg.global_rope_theta:
+            thetas = np.where(windows == 0, cfg.global_rope_theta, thetas)
+        li = gi = 0
+        lk, lv = list(caches["local_k"]), list(caches["local_v"])
+        gk, gv = list(caches["global_k"]), list(caches["global_v"])
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            w = int(windows[i])
+            h = L.norm(x, lp["ln1"], cfg)
+            if w > 0:
+                a, lk[li], lv[li] = L.attention_decode(
+                    h, lp["attn"], cfg, lk[li], lv[li], posb, cache_len,
+                    window=w, theta=float(thetas[i]), rolling=True)
+                li += 1
+            else:
+                a, gk[gi], gv[gi] = L.attention_decode(
+                    h, lp["attn"], cfg, gk[gi], gv[gi], posb, cache_len,
+                    theta=float(thetas[i]))
+                gi += 1
+            if cfg.sandwich_norm:
+                a = L.norm(a, lp["ln1b"], cfg)
+            x = x + a
+            h = L.norm(x, lp["ln2"], cfg)
+            m = L.mlp(h, lp["mlp"], cfg)
+            if cfg.sandwich_norm:
+                m = L.norm(m, lp["ln2b"], cfg)
+            x = x + m
+        new_caches = {
+            "local_k": jnp.stack(lk) if lk else caches["local_k"],
+            "local_v": jnp.stack(lv) if lv else caches["local_v"],
+            "global_k": jnp.stack(gk) if gk else caches["global_k"],
+            "global_v": jnp.stack(gv) if gv else caches["global_v"],
+        }
+
+    else:                                      # dense / moe / vlm
+        windows, thetas = _layer_meta(cfg)
+
+        # fori_loop with the caches as CARRY + per-layer dynamic-update:
+        # a scan would stream the (L,B,T,H,hd) caches through xs/ys,
+        # multi-buffering ~5x the cache in temps (measured: 41.4 GiB/dev
+        # for qwen2-72b decode_32k); the carried DUS aliases in place.
+        def body(i, carry):
+            c, kc_all, vc_all = carry
+            lp = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, False),
+                params["layers"])
+            th = thetas[i]
+            h = L.norm(c, lp["ln1"], cfg)
+            kc = jax.lax.dynamic_index_in_dim(kc_all, i, 0, False)
+            vc = jax.lax.dynamic_index_in_dim(vc_all, i, 0, False)
+            scales = {}
+            if cfg.kv_quant:
+                scales = dict(
+                    k_scale=jax.lax.dynamic_index_in_dim(
+                        caches["k_scale"], i, 0, False),
+                    v_scale=jax.lax.dynamic_index_in_dim(
+                        caches["v_scale"], i, 0, False))
+            a, kc, vc = L.attention_decode(h, lp["attn"], cfg, kc, vc,
+                                           posb, cache_len, window=0,
+                                           theta=th, **scales)
+            kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, i, 0)
+            vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, i, 0)
+            c = c + a
+            h = L.norm(c, lp["ln2"], cfg)
+            if cfg.moe is not None:
+                m = moe_lib.moe_mlp(h, lp["moe"], cfg)
+            else:
+                m = L.mlp(h, lp["mlp"], cfg)
+            return (c + m, kc_all, vc_all)
+
+        x, kc, vc = jax.lax.fori_loop(
+            0, cfg.n_layers, body, (x, caches["k"], caches["v"]))
+        new_caches = {"k": kc, "v": vc}
+        if cfg.kv_quant:
+            new_caches["k_scale"] = caches["k_scale"]
+            new_caches["v_scale"] = caches["v_scale"]
+
+    x = L.norm(x, params["final_norm"], cfg)
+    logits = L.lm_logits(x, params, cfg)[:, 0]
+    return logits, new_caches
+
+
+def _zamba_decode(params, caches, x, posb, cache_len, cfg: ArchConfig):
+    k = cfg.hybrid_attn_every
+    n_attn = cfg.n_layers // k
+    per_group = k - 1
+    grouped = n_attn * per_group
+    mam = params["layers"]
+    regroup = lambda a: a[:grouped].reshape((n_attn, per_group) + a.shape[1:])
+    head = jax.tree.map(regroup, mam)
+    tail = jax.tree.map(lambda a: a[grouped:], mam)
+    shared = params["shared_attn"]
+    ssd_h, conv_h = (jax.tree.map(regroup, caches["ssd"]),
+                     jax.tree.map(regroup, caches["conv"]))
+    ssd_t = caches["ssd"][grouped:]
+    conv_t = caches["conv"][grouped:]
+
+    def mamba_step(c, inp):
+        lp, ssd, conv = inp
+        h = L.norm(c, lp["ln1"], cfg)
+        a, st = ssm_lib.mamba2_decode(h, lp["mamba"], cfg,
+                                      {"ssd": ssd, "conv": conv})
+        return c + a, (st["ssd"], st["conv"])
+
+    def group_body(c, inp):
+        glp, ssd, conv, ak, av = inp
+        c, (ssd, conv) = jax.lax.scan(mamba_step, c, (glp, ssd, conv))
+        h = L.norm(c, shared["ln1"], cfg)
+        a, ak, av = L.attention_decode(h, shared["attn"], cfg, ak, av,
+                                       posb, cache_len)
+        c = c + a
+        h = L.norm(c, shared["ln2"], cfg)
+        c = c + L.mlp(h, shared["mlp"], cfg)
+        return c, (ssd, conv, ak, av)
+
+    x, (ssd_h2, conv_h2, ak, av) = jax.lax.scan(
+        group_body, x, (head, ssd_h, conv_h, caches["attn_k"],
+                        caches["attn_v"]))
+    x, (ssd_t2, conv_t2) = jax.lax.scan(mamba_step, x, (tail, ssd_t, conv_t))
+    new = {
+        "ssd": jnp.concatenate([ssd_h2.reshape((grouped,) + ssd_h2.shape[2:]),
+                                ssd_t2]),
+        "conv": jnp.concatenate(
+            [conv_h2.reshape((grouped,) + conv_h2.shape[2:]), conv_t2]),
+        "attn_k": ak, "attn_v": av,
+    }
+    return x, new
+
+
+# ------------------------------------------------------------- prefill step
+
+def prefill_step(params, tokens, cfg: ArchConfig, *, frames=None,
+                 patches=None, pos=None, impl="auto", schedule="dense"):
+    """Full-sequence forward that also builds the decode state.
+
+    Returns (last-position logits (B, V), caches at len S).
+    """
+    b, s = tokens.shape
+    if pos is None:
+        pos_arr = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    else:
+        pos_arr = pos
+
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        x = L.embed_tokens(tokens, params["embed"], cfg)
+
+        def body(c, lp):
+            h = L.norm(c, lp["ln1"], cfg)
+            a, st, ax = ssm_lib.rwkv6_time_mix(h, lp["rwkv"], cfg)
+            c = c + a
+            h = L.norm(c, lp["ln2"], cfg)
+            m, fx = ssm_lib.rwkv6_channel_mix(h, lp["rwkv"], cfg)
+            return c + m, (st, ax, fx)
+
+        x, (wkv, ax, fx) = jax.lax.scan(body, x, params["layers"])
+        caches = {"wkv": wkv, "att_x": ax, "ffn_x": fx}
+
+    elif cfg.family == "ssm" and cfg.ssm.kind == "mamba2":
+        x = L.embed_tokens(tokens, params["embed"], cfg)
+
+        def body(c, lp):
+            h = L.norm(c, lp["ln1"], cfg)
+            a, st = ssm_lib.mamba2_train(h, lp["mamba"], cfg,
+                                         return_state=True)
+            return c + a, st
+
+        x, sts = jax.lax.scan(body, x, params["layers"])
+        caches = {"ssd": sts["ssd"], "conv": sts["conv"]}
+
+    elif cfg.family == "audio":
+        enc = whisper_encode(params, frames, cfg, impl, schedule)
+        x, caches = _whisper_prefill_dec(params, tokens, enc, cfg, impl,
+                                         schedule)
+
+    elif cfg.family == "hybrid":
+        x, caches = _zamba_prefill(params, tokens, cfg, pos_arr, impl,
+                                   schedule)
+
+    else:
+        x, caches = _dense_prefill(params, tokens, cfg, pos_arr, patches,
+                                   impl, schedule)
+
+    x = L.norm(x, params["final_norm"], cfg)
+    logits = L.lm_logits(x[:, -1:], params, cfg)[:, 0]
+    return logits, caches
+
+
+def _attn_with_cache(h, lp_attn, cfg, pos_arr, w, th, impl, schedule):
+    """Full-seq self attention returning (out, roped k, v) for the cache."""
+    q, kk, vv = L.qkv_project(h, lp_attn, cfg)
+    if cfg.rope_pct > 0:
+        q = L.apply_rope(q, pos_arr, cfg, th)
+        kk = L.apply_rope(kk, pos_arr, cfg, th)
+    s = h.shape[1]
+    if _use_flash(s, s, impl):
+        o = flash_attention(q, kk, vv, True, schedule, BLOCK, BLOCK, w, 10**9, 0)
+    else:
+        o = reference_attention(q, kk, vv, True, w, 10**9, 0)
+    o = L.dot(o.reshape(h.shape[0], s, -1).astype(_cdt(cfg)), lp_attn["wo"], cfg)
+    if cfg.attn_out_bias:
+        o = o + lp_attn["bo"].astype(o.dtype)
+    return o, kk.astype(jnp.bfloat16), vv.astype(jnp.bfloat16)
+
+
+def _dense_prefill(params, tokens, cfg, pos_arr, patches, impl, schedule):
+    x = L.embed_tokens(tokens, params["embed"], cfg)
+    if cfg.vlm is not None and patches is not None:
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        b = x.shape[0]
+        pos_arr = pos_arr if pos_arr.shape[-1] == x.shape[1] else \
+            jnp.broadcast_to(jnp.arange(x.shape[1])[None], (b, x.shape[1]))
+    windows, thetas = _layer_meta(cfg)
+    mixed = any(w > 0 for w in cfg.windows())
+
+    def body(c, inp):
+        lp, w, th = inp
+        h = L.norm(c, lp["ln1"], cfg)
+        a, kk, vv = _attn_with_cache(h, lp["attn"], cfg, pos_arr, w, th,
+                                     impl, schedule)
+        if cfg.sandwich_norm:
+            a = L.norm(a, lp["ln1b"], cfg)
+        c = c + a
+        h = L.norm(c, lp["ln2"], cfg)
+        if cfg.moe is not None:
+            m = moe_lib.moe_mlp(h, lp["moe"], cfg)
+        else:
+            m = L.mlp(h, lp["mlp"], cfg)
+        if cfg.sandwich_norm:
+            m = L.norm(m, lp["ln2b"], cfg)
+        return c + m, (kk, vv)
+
+    x, (kc, vc) = jax.lax.scan(body, x, (params["layers"], windows, thetas))
+
+    if not mixed:
+        if cfg.kv_quant:
+            kq, vq, ks, vs = L.quantize_kv(kc, vc)
+            return x, {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        return x, {"k": kc, "v": vc}
+    # gemma3: split stacked caches into ring-buffer local + full global
+    wlist = cfg.windows()
+    w = max(ww for ww in wlist if ww > 0)
+    s = kc.shape[2]
+    local_idx = jnp.asarray(
+        [i for i, ww in enumerate(wlist) if ww > 0], jnp.int32)
+    global_idx = jnp.asarray(
+        [i for i, ww in enumerate(wlist) if ww == 0], jnp.int32)
+    keep = min(w, s)
+    # ring-buffer layout: position p lives in slot p % keep (decode uses
+    # modular indexing), so scatter the last ``keep`` positions accordingly
+    pos_tail = jnp.arange(s - keep, s)
+    ring_slots = pos_tail % keep
+    lk = kc[local_idx]
+    lv = vc[local_idx]
+    ring_k = jnp.zeros_like(lk[:, :, :keep]).at[:, :, ring_slots].set(
+        lk[:, :, pos_tail])
+    ring_v = jnp.zeros_like(lv[:, :, :keep]).at[:, :, ring_slots].set(
+        lv[:, :, pos_tail])
+    caches = {
+        "local_k": ring_k,
+        "local_v": ring_v,
+        "global_k": kc[global_idx],
+        "global_v": vc[global_idx],
+    }
+    return x, caches
+
+
+def _zamba_prefill(params, tokens, cfg, pos_arr, impl, schedule):
+    k = cfg.hybrid_attn_every
+    n_attn = cfg.n_layers // k
+    per_group = k - 1
+    grouped = n_attn * per_group
+    x = L.embed_tokens(tokens, params["embed"], cfg)
+    mam = params["layers"]
+    regroup = lambda a: a[:grouped].reshape((n_attn, per_group) + a.shape[1:])
+    head = jax.tree.map(regroup, mam)
+    tail = jax.tree.map(lambda a: a[grouped:], mam)
+    shared = params["shared_attn"]
+
+    def mamba_step(c, lp):
+        h = L.norm(c, lp["ln1"], cfg)
+        a, st = ssm_lib.mamba2_train(h, lp["mamba"], cfg, return_state=True)
+        return c + a, st
+
+    def group_body(c, glp):
+        c, sts = jax.lax.scan(mamba_step, c, glp)
+        h = L.norm(c, shared["ln1"], cfg)
+        a, kk, vv = _attn_with_cache(h, shared["attn"], cfg, pos_arr, 0,
+                                     cfg.rope_theta, impl, schedule)
+        c = c + a
+        h = L.norm(c, shared["ln2"], cfg)
+        c = c + L.mlp(h, shared["mlp"], cfg)
+        return c, (sts, kk, vv)
+
+    x, (sts_h, ak, av) = jax.lax.scan(group_body, x, head)
+    x, sts_t = jax.lax.scan(mamba_step, x, tail)
+    flat = lambda a: a.reshape((grouped,) + a.shape[2:])
+    caches = {
+        "ssd": jnp.concatenate([flat(sts_h["ssd"]), sts_t["ssd"]]),
+        "conv": jnp.concatenate([flat(sts_h["conv"]), sts_t["conv"]]),
+        "attn_k": ak, "attn_v": av,
+    }
+    return x, caches
+
+
+def _whisper_prefill_dec(params, tokens, enc, cfg, impl, schedule):
+    b, s = tokens.shape
+    x = L.embed_tokens(tokens, params["embed"], cfg)
+    x = x + sinusoid_pos(s, cfg.d_model)[None].astype(x.dtype)
+    pos_arr = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    es = enc.shape[1]
+    pad = _enc_pad(cfg) - es
+    enc_p = jnp.pad(enc, ((0, 0), (0, pad), (0, 0))) if pad else enc
+
+    def body(c, lp):
+        h = L.norm(c, lp["ln1"], cfg)
+        a, sk, sv = _attn_with_cache(h, lp["attn"], cfg, pos_arr, 0,
+                                     cfg.rope_theta, impl, schedule)
+        c = c + a
+        h = L.norm(c, lp["ln2"], cfg)
+        c = c + attention_full(h, lp["cross"], cfg, pos_arr, 0,
+                               cfg.rope_theta, impl=impl, schedule=schedule,
+                               kv_x=enc_p, kv_valid=es)
+        ck = L._split_heads(L.dot(enc, lp["cross"]["wk"], cfg),
+                            cfg.n_kv_heads).astype(jnp.bfloat16)
+        cv = L._split_heads(L.dot(enc, lp["cross"]["wv"], cfg),
+                            cfg.n_kv_heads).astype(jnp.bfloat16)
+        h = L.norm(c, lp["ln3"], cfg)
+        return c + L.mlp(h, lp["mlp"], cfg), (sk, sv, ck, cv)
+
+    x, (sk, sv, ck, cv) = jax.lax.scan(body, x, params["layers"])
+    return x, {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv}

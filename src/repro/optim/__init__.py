@@ -1,0 +1,11 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compress import (
+    compress_int8, decompress_int8, error_feedback_update,
+)
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+    "cosine_schedule",
+    "compress_int8", "decompress_int8", "error_feedback_update",
+]

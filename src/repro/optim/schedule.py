@@ -1,0 +1,17 @@
+"""Learning-rate schedules (step -> multiplier in [0, 1])."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(warmup: int, total_steps: int, min_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``min_frac``."""
+    def fn(step: jnp.ndarray) -> jnp.ndarray:
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        prog = (step - warmup) / jnp.maximum(total_steps - warmup, 1)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = min_frac + (1.0 - min_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

@@ -1,0 +1,17 @@
+from repro.parallel.sharding import (
+    ShardingRules,
+    default_rules,
+    logical_spec,
+    constrain,
+    set_rules,
+    get_rules,
+)
+
+__all__ = [
+    "ShardingRules",
+    "default_rules",
+    "logical_spec",
+    "constrain",
+    "set_rules",
+    "get_rules",
+]

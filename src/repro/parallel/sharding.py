@@ -1,0 +1,113 @@
+"""Logical-axis sharding rules -> PartitionSpecs.
+
+Model code annotates tensors with *logical* axis names ("batch", "seq",
+"embed", "heads", "ff", "vocab", "expert", "kv_seq", ...).  A ``ShardingRules``
+table maps logical names to mesh axes; rules degrade per-tensor: a logical
+axis whose size does not divide the mapped mesh axes is silently replicated
+(e.g. gemma3's 4 attention heads on a 16-way model axis), so a single rule
+set serves every architecture.
+
+Rules are installed per-launch (a plain module global — launches are single
+threaded) and read at trace time by ``constrain``/``logical_spec``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    table: Dict[str, AxisVal]
+
+    def mesh_size(self, axis: AxisVal) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, str):
+            axis = (axis,)
+        size = 1
+        for a in axis:
+            size *= self.mesh.shape[a]
+        return size
+
+
+def default_rules(mesh: Mesh, fsdp: bool = True) -> ShardingRules:
+    names = mesh.axis_names
+    batch_axes: Tuple[str, ...] = tuple(a for a in ("pod", "data") if a in names)
+    table: Dict[str, AxisVal] = {
+        "batch": batch_axes or None,
+        "pairs": batch_axes or None,      # GED verification pairs
+        "seq": None,
+        "act_seq": "model",               # sequence-parallel activations
+        "kv_seq": "model",                # decode KV cache sequence sharding
+        "embed": ("data" if (fsdp and "data" in names) else None),
+        "heads": "model",
+        "qkv_flat": "model",              # flattened (H*hd) projections
+        "ff": "model",
+        "vocab": "model",
+        "expert": "model",
+        "conv": None,
+        "state": None,
+        "stage": ("pod" if "pod" in names else None),
+    }
+    return ShardingRules(mesh, table)
+
+
+_RULES: Optional[ShardingRules] = None
+
+
+def set_rules(rules: Optional[ShardingRules]) -> None:
+    global _RULES
+    _RULES = rules
+
+
+def get_rules() -> Optional[ShardingRules]:
+    return _RULES
+
+
+def logical_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                 rules: Optional[ShardingRules] = None) -> P:
+    """PartitionSpec for ``shape`` with logical ``axes`` (None = replicated).
+
+    Degrades to replication per-dimension when the dim does not divide the
+    mapped mesh axes.
+    """
+    rules = rules or _RULES
+    if rules is None:
+        return P()
+    spec = []
+    for dim, name in zip(shape, axes):
+        if name is None:
+            spec.append(None)
+            continue
+        mapped = rules.table.get(name)
+        if mapped is None:
+            spec.append(None)
+            continue
+        if dim % rules.mesh_size(mapped) != 0:
+            spec.append(None)  # degrade: replicate this dim
+        else:
+            spec.append(mapped)
+    return P(*spec)
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` by logical axis names (no-op w/o rules)."""
+    rules = _RULES
+    if rules is None:
+        return x
+    spec = logical_spec(x.shape, axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def named_sharding(rules: ShardingRules, shape: Sequence[int],
+                   axes: Sequence[Optional[str]]) -> NamedSharding:
+    return NamedSharding(rules.mesh, logical_spec(shape, axes, rules))

@@ -1,0 +1,5 @@
+from repro.runtime.loop import FaultInjector, SimulatedFault, train_loop
+from repro.runtime.scheduler import GedScheduler, difficulty
+
+__all__ = ["FaultInjector", "SimulatedFault", "train_loop",
+           "GedScheduler", "difficulty"]

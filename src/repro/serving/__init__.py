@@ -1,0 +1,4 @@
+from repro.serving.ged_service import GedVerificationService, GedRequest
+from repro.serving.lm_decode import generate
+
+__all__ = ["GedVerificationService", "GedRequest", "generate"]

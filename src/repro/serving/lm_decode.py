@@ -1,0 +1,74 @@
+"""LM serving: prefill + token-by-token decode with a sharded KV cache.
+
+``generate`` drives the real model step functions (the same ones the
+dry-run lowers for the production mesh) at example scale: prefill builds
+the cache, then ``decode_step`` is jitted once and re-invoked per token
+with donated caches — steady-state decode allocates nothing.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+
+
+def greedy_sample(logits: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """(B, V_padded) f32 -> (B, 1) int32, masking vocab padding."""
+    if logits.shape[-1] > vocab:
+        pad = jnp.arange(logits.shape[-1]) >= vocab
+        logits = jnp.where(pad[None], -jnp.inf, logits)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+
+def generate(params, prompt: np.ndarray, cfg: ArchConfig, max_new: int = 16,
+             cache_len: Optional[int] = None,
+             frames: Optional[np.ndarray] = None,
+             patches: Optional[np.ndarray] = None,
+             impl: str = "auto") -> np.ndarray:
+    """Greedy generation. prompt: (B, S) int32. Returns (B, max_new)."""
+    b, s = prompt.shape
+    total = cache_len or (s + max_new)
+
+    logits, caches = jax.jit(
+        functools.partial(T.prefill_step, cfg=cfg, impl=impl)
+    )(params, jnp.asarray(prompt), frames=frames, patches=patches)
+
+    # right-size the decode cache: prefill caches cover [0, s); decode wants
+    # capacity ``total`` (rwkv6/mamba carry O(1) state - nothing to grow).
+    caches = _grow_caches(caches, cfg, b, s, total)
+
+    step = jax.jit(functools.partial(T.decode_step, cfg=cfg),
+                   donate_argnums=(1,))
+
+    token = greedy_sample(logits, cfg.vocab)
+    out = [token]
+    pos = s
+    for _ in range(max_new - 1):
+        logits, caches = step(params, caches, token, jnp.int32(pos))
+        token = greedy_sample(logits, cfg.vocab)
+        out.append(token)
+        pos += 1
+    return np.concatenate([np.asarray(t) for t in out], axis=1)
+
+
+def _grow_caches(caches: Dict, cfg: ArchConfig, b: int, s: int, total: int
+                 ) -> Dict:
+    want = T.cache_shapes(cfg, b, total)
+    out = {}
+    for k, v in caches.items():
+        shape, dt = want[k]
+        if v.shape == shape:
+            out[k] = v.astype(dt)
+            continue
+        buf = jnp.zeros(shape, dt)
+        # KV entries: (L, B, T, H, hd) — copy the prefilled [0, s) slice.
+        sl = tuple(slice(0, min(a, b_)) for a, b_ in zip(v.shape, shape))
+        out[k] = buf.at[sl].set(v[sl].astype(dt))
+    return out

@@ -1,0 +1,42 @@
+"""Shared fixtures.  NOTE: XLA_FLAGS / device-count overrides are deliberately
+NOT set here — smoke tests and benches must see the real single CPU device.
+Multi-device tests spawn subprocesses with their own XLA_FLAGS."""
+
+import numpy as np
+import pytest
+
+from repro.core.exact.graph import Graph
+
+
+@pytest.fixture
+def paper_fig1_pair():
+    """A reconstruction of the paper's Figure 1 pair (figure not in text).
+
+    Satisfies every property the text states: structure q = {(v1,v2),(v1,v3),
+    (v3,v4)}, g = {(u1,u2),(u2,u4),(u3,u4)}; identity mapping editorial cost
+    3; delta(q, g) = 3; delta^LS(f1) = 0 and delta^LSa(f1) = 2 for
+    f1 = {v1 -> u1} (verified by exhaustive search over label placements).
+    """
+    A, B = 0, 1
+    a, b = 1, 2
+    q = Graph.from_edges([A, B, A, A], [(0, 1, a), (0, 2, b), (2, 3, a)])
+    g = Graph.from_edges([A, B, A, A], [(0, 1, b), (1, 3, a), (2, 3, a)])
+    return q, g
+
+
+@pytest.fixture
+def paper_fig3_pair():
+    """Paper Figure 3: delta(q, g) <= 5 (4 vertices vs 5 vertices)."""
+    A, B, C = 0, 1, 2
+    a, b = 1, 2
+    q = Graph.from_edges([A, B, B, B], [(0, 1, a), (1, 2, 1), (2, 3, b), (1, 3, b)])
+    g = Graph.from_edges(
+        [B, B, B, B, C],
+        [(0, 1, a), (1, 2, b), (2, 3, b), (1, 3, b), (0, 4, b), (3, 4, 1)],
+    )
+    return q, g
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

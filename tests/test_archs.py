@@ -1,0 +1,178 @@
+"""Per-architecture smoke tests (reduced configs, CPU).
+
+For every assigned arch:
+  * one train step — finite loss, params update, no NaNs;
+  * prefill + decode — decode logits at position s must match the
+    full-sequence forward logits at position s (validates KV caches, ring
+    buffers, SSM/RWKV recurrences and the hybrid shared-attn cache against
+    the parallel formulation).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.models import transformer as T
+from repro.models.config import reduced
+from repro.models.params import init_params, param_count
+from repro.optim import AdamWConfig, adamw_init
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _smoke_cfg(name, lossless_moe=False):
+    base = get_arch(name)
+    # windowed archs: 3 layers so both local and global caches exist
+    cfg = reduced(base, layers=3 if base.window_pattern else 2)
+    # f32 compute so prefill/decode consistency is tight on CPU
+    cfg = dataclasses.replace(cfg, remat="none", compute_dtype="float32")
+    if lossless_moe and cfg.moe is not None:
+        # capacity high enough that no token is dropped — routing-drop
+        # policy differs between full-forward and single-token decode, so
+        # the consistency oracle needs drop-free dispatch
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    return cfg
+
+
+def _batch_for(cfg, b, s, rng):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+    }
+    if cfg.vlm is not None:
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.vlm.num_patches, cfg.d_model)) * 0.02,
+            jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encdec.enc_seq, cfg.d_model)) * 0.02,
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = _smoke_cfg(arch)
+    assert param_count(cfg) > 0
+    params = init_params(cfg, seed=0)
+    opt = adamw_init(params)
+    step = T.make_train_step(cfg, AdamWConfig(lr=1e-3, warmup=1,
+                                              total_steps=10),
+                             accum=1, impl="naive")
+    rng = np.random.default_rng(0)
+    batch = _batch_for(cfg, b=2, s=16, rng=rng)
+    params2, opt2, metrics = jax.jit(step)(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, x: a + float(jnp.sum(jnp.abs(x[0] - x[1]))),
+        jax.tree.map(lambda a, b: (a, b), params, params2), 0.0)
+    assert delta > 0
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree.leaves(params2))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_accum_matches(arch):
+    """Gradient accumulation (scan over microbatches) == single big batch."""
+    cfg = _smoke_cfg(arch)
+    params = init_params(cfg, seed=0)
+    opt = adamw_init(params)
+    rng = np.random.default_rng(1)
+    batch = _batch_for(cfg, b=4, s=8, rng=rng)
+    s1 = T.make_train_step(cfg, AdamWConfig(lr=1e-3), accum=1, impl="naive")
+    s2 = T.make_train_step(cfg, AdamWConfig(lr=1e-3), accum=2, impl="naive")
+    p1, _, m1 = jax.jit(s1)(params, opt, batch)
+    p2, _, m2 = jax.jit(s2)(params, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=2e-4)
+    l1 = jax.tree.leaves(p1)[0]
+    l2 = jax.tree.leaves(p2)[0]
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    cfg = _smoke_cfg(arch, lossless_moe=True)
+    params = init_params(cfg, seed=0)
+    rng = np.random.default_rng(2)
+    b, s = 2, 12
+    batch = _batch_for(cfg, b, s + 1, rng)
+    tokens = batch["tokens"]
+    frames = batch.get("frames")
+    patches = batch.get("patches")
+
+    # prefill on the first s tokens
+    logits_p, caches = T.prefill_step(params, tokens[:, :s], cfg,
+                                      frames=frames, patches=patches,
+                                      impl="naive")
+    # decode token s against the cache
+    stream = s + (cfg.vlm.num_patches if cfg.vlm is not None else 0)
+    caches = _grow(caches, cfg, b, stream + 4)
+    logits_d, _ = T.decode_step(params, caches, tokens[:, s:s + 1],
+                                jnp.int32(stream), cfg)
+
+    # oracle: full forward over s+1 tokens
+    h = T.forward_hidden(params, tokens[:, :s + 1], cfg, patches=patches,
+                         frames=frames, impl="naive")
+    from repro.models import layers as L
+    h = L.norm(h, params["final_norm"], cfg)
+    logits_full = L.lm_logits(h, params, cfg)
+
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(logits_full[:, stream - 1]),
+                               atol=2e-3, rtol=2e-2)
+    np.testing.assert_allclose(np.asarray(logits_d),
+                               np.asarray(logits_full[:, stream]),
+                               atol=2e-3, rtol=2e-2)
+
+
+def _grow(caches, cfg, b, total):
+    want = T.cache_shapes(cfg, b, total)
+    out = {}
+    for k, v in caches.items():
+        shape, dt = want[k]
+        if v.shape == shape:
+            out[k] = v.astype(dt)
+            continue
+        buf = jnp.zeros(shape, dt)
+        sl = tuple(slice(0, min(a, bb)) for a, bb in zip(v.shape, shape))
+        out[k] = buf.at[sl].set(v[sl].astype(dt))
+    return out
+
+
+def test_gemma3_window_pattern():
+    cfg = get_arch("gemma3-1b")
+    w = cfg.windows()
+    assert len(w) == 26
+    assert sum(1 for x in w if x == 0) == 4          # globals (every 6th)
+    assert all(x in (0, 512) for x in w)
+
+
+def test_moe_configs_pad_evenly():
+    for name in ("qwen2-moe-a2.7b", "moonshot-v1-16b-a3b"):
+        cfg = get_arch(name)
+        assert cfg.moe.total_experts % 16 == 0       # EP-16 divisible
+
+
+def test_param_counts_in_range():
+    """Sanity: full-scale param counts within 25% of the nominal sizes."""
+    nominal = {
+        "qwen3-8b": 8.2e9, "qwen2-72b": 72.7e9, "gemma3-1b": 1.0e9,
+        "nemotron-4-15b": 15e9, "rwkv6-3b": 3.1e9, "zamba2-7b": 7.4e9,
+        "whisper-large-v3": 1.5e9, "qwen2-vl-2b": 1.5e9,
+        "qwen2-moe-a2.7b": 14.3e9,
+        # the ASSIGNED spec (48L x 64e x d_ff 1408) gives 28B total; the
+        # name's nominal 16B corresponds to the 27L original — we follow
+        # the assignment (DESIGN.md §4).
+        "moonshot-v1-16b-a3b": 28e9,
+    }
+    for name, want in nominal.items():
+        got = param_count(get_arch(name))
+        assert 0.7 * want < got < 1.35 * want, (name, got, want)

@@ -1,0 +1,319 @@
+"""Exact-core correctness: editorial cost, assignment, bounds, search."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.exact.assignment import (
+    brute_force_assignment,
+    hungarian,
+    solve_forced_all,
+)
+from repro.core.exact.bounds import BoundEvaluator, PairContext, remaining_lower_bound
+from repro.core.exact.brute import brute_force_extension_cost, brute_force_ged
+from repro.core.exact.graph import Graph, editorial_cost, pad_pair
+from repro.core.exact.multiset import multiset_edit_distance
+from repro.core.exact.order import matching_order
+from repro.core.exact.search import BOUNDS, ged, ged_verify
+from repro.data.graphs import perturb, random_graph
+
+
+# ---------------------------------------------------------------- multiset
+def test_multiset_edit_distance_paper_example():
+    assert multiset_edit_distance(["a", "a", "b"], ["a", "a", "a"]) == 1
+    assert multiset_edit_distance([], []) == 0
+    assert multiset_edit_distance([], [1, 2, 3]) == 3
+
+
+# -------------------------------------------------------------- editorial
+def test_editorial_cost_identity():
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        g = random_graph(rng, 8)
+        assert editorial_cost(g, g, np.arange(8)) == 0
+
+
+def test_editorial_cost_paper_fig1(paper_fig1_pair):
+    q, g = paper_fig1_pair
+    # identity mapping v_i -> u_i has editorial cost 3 (paper intro)
+    assert editorial_cost(q, g, np.arange(4)) == 3
+
+
+def test_editorial_cost_symmetric_under_inverse():
+    rng = np.random.default_rng(2)
+    for _ in range(20):
+        q = random_graph(rng, 6)
+        g = random_graph(rng, 6)
+        f = rng.permutation(6)
+        finv = np.argsort(f)
+        assert editorial_cost(q, g, f) == editorial_cost(g, q, finv)
+
+
+# -------------------------------------------------------------- assignment
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 5, 6])
+def test_hungarian_matches_brute_force(n):
+    rng = np.random.default_rng(n)
+    for _ in range(25):
+        cost = rng.integers(0, 20, size=(n, n)).astype(float) * 0.5
+        col, total = hungarian(cost)
+        _, bf = brute_force_assignment(cost)
+        assert sorted(col.tolist()) == list(range(n))
+        assert total == pytest.approx(bf)
+        assert sum(cost[i, col[i]] for i in range(n)) == pytest.approx(total)
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5, 6])
+def test_solve_forced_all_matches_per_column_solves(n):
+    rng = np.random.default_rng(100 + n)
+    for trial in range(15):
+        cost = rng.integers(0, 15, size=(n, n)).astype(float) * 0.5
+        row = int(rng.integers(0, n))
+        forced, col, total = solve_forced_all(cost, row)
+        _, bf_total = brute_force_assignment(cost)
+        assert total == pytest.approx(bf_total)
+        for c in range(n):
+            # oracle: brute force over permutations with row -> c fixed
+            best = np.inf
+            others = [r for r in range(n) if r != row]
+            cols = [cc for cc in range(n) if cc != c]
+            for perm in itertools.permutations(cols):
+                s = cost[row, c] + sum(cost[r, p] for r, p in zip(others, perm))
+                best = min(best, s)
+            assert forced[c] == pytest.approx(best), f"col {c}"
+
+
+# ------------------------------------------------------------------ bounds
+def _random_state(rng, q, g, order, level):
+    img = tuple(int(u) for u in rng.choice(g.n, size=level, replace=False))
+    return img
+
+
+def _state_g_cost(ctx, order, img):
+    """delta_f(q[f], g[f]) computed from scratch."""
+    q, g = ctx.q, ctx.g
+    i = len(img)
+    anchors_q = order[:i]
+    cost = 0
+    for j in range(i):
+        if q.vlabels[anchors_q[j]] != g.vlabels[img[j]]:
+            cost += 1
+    for j in range(i):
+        for k in range(j + 1, i):
+            if q.adj[anchors_q[j], anchors_q[k]] != g.adj[img[j], img[k]]:
+                cost += 1
+    return float(cost)
+
+
+@pytest.mark.parametrize("kind", list(BOUNDS))
+def test_bounds_admissible_against_brute_force(kind):
+    """lb(f) <= min editorial cost over all extensions of f (Def. 3.1)."""
+    rng = np.random.default_rng(7)
+    for trial in range(12):
+        n = int(rng.integers(4, 7))
+        q = random_graph(rng, n, density=0.4, n_vlabels=3, n_elabels=2)
+        g = perturb(rng, q, int(rng.integers(0, 4)), n_vlabels=3, n_elabels=2)
+        q, g, _ = pad_pair(q, g)
+        order = matching_order(q, g)
+        ctx = PairContext(q, g, order)
+        ev = BoundEvaluator(ctx)
+        level = int(rng.integers(0, n - 1))
+        img = _random_state(rng, q, g, order, level)
+        g_cost = _state_g_cost(ctx, order, img)
+        from repro.core.exact.bounds import SCORERS
+        scores = SCORERS[kind].__get__(ev)(img, g_cost, None)
+        for u in range(n):
+            if not np.isfinite(scores.lb[u]):
+                continue
+            oracle = brute_force_extension_cost(q, g, order, img + (u,))
+            assert scores.lb[u] <= oracle + 1e-9, (
+                f"{kind} inadmissible: lb={scores.lb[u]} > opt={oracle} "
+                f"(n={n}, level={level}, img={img}, u={u})"
+            )
+            # child g_cost must be the exact partial editorial cost
+            assert scores.g_cost[u] == pytest.approx(
+                _state_g_cost(ctx, order, img + (u,))
+            )
+
+
+def test_bound_dominance_chain():
+    """BMa >= LSa >= LS and BMa >= BM on whole states (Lemma 4.1 et al.)."""
+    rng = np.random.default_rng(11)
+    for trial in range(30):
+        n = int(rng.integers(4, 8))
+        q = random_graph(rng, n, density=0.4, n_vlabels=3, n_elabels=2)
+        g = perturb(rng, q, int(rng.integers(0, 5)), n_vlabels=3, n_elabels=2)
+        q, g, _ = pad_pair(q, g)
+        order = matching_order(q, g)
+        ctx = PairContext(q, g, order)
+        level = int(rng.integers(0, n))
+        img = _random_state(rng, q, g, order, level)
+        ls = remaining_lower_bound(ctx, img, "LS")
+        lsa = remaining_lower_bound(ctx, img, "LSa")
+        bm = remaining_lower_bound(ctx, img, "BM")
+        bma = remaining_lower_bound(ctx, img, "BMa")
+        assert lsa >= ls - 1e-9
+        assert bma >= lsa - 1e-9, f"BMa {bma} < LSa {lsa} (img={img})"
+        assert bma >= bm - 1e-9
+
+
+def test_ls_fast_children_match_naive_state_bound():
+    """Alg. 4 surplus-counter scoring == naive recomputation per child."""
+    rng = np.random.default_rng(13)
+    for trial in range(15):
+        n = int(rng.integers(4, 8))
+        q = random_graph(rng, n, density=0.4, n_vlabels=3, n_elabels=2)
+        g = perturb(rng, q, 2, n_vlabels=3, n_elabels=2)
+        q, g, _ = pad_pair(q, g)
+        order = matching_order(q, g)
+        ctx = PairContext(q, g, order)
+        ev = BoundEvaluator(ctx)
+        level = int(rng.integers(0, n - 1))
+        img = _random_state(rng, q, g, order, level)
+        g_cost = _state_g_cost(ctx, order, img)
+        for kind in ("LS", "LSa"):
+            from repro.core.exact.bounds import SCORERS
+            scores = SCORERS[kind].__get__(ev)(img, g_cost, None)
+            for u in range(n):
+                if not np.isfinite(scores.lb[u]):
+                    continue
+                naive = (
+                    _state_g_cost(ctx, order, img + (u,))
+                    + remaining_lower_bound(ctx, img + (u,), kind)
+                )
+                assert scores.lb[u] == pytest.approx(naive), (
+                    f"{kind} fast != naive at u={u}: "
+                    f"{scores.lb[u]} vs {naive} (img={img})"
+                )
+
+
+# ------------------------------------------------------------------ search
+@pytest.mark.parametrize("bound", ["LS", "LSa", "BM", "BMa"])
+@pytest.mark.parametrize("strategy", ["astar", "dfs"])
+def test_search_matches_brute_force(bound, strategy):
+    rng = np.random.default_rng(17)
+    for trial in range(10):
+        n = int(rng.integers(3, 6))
+        q = random_graph(rng, n, density=0.4, n_vlabels=3, n_elabels=2)
+        m = int(rng.integers(3, 6))
+        g = random_graph(rng, m, density=0.4, n_vlabels=3, n_elabels=2)
+        expected = brute_force_ged(q, g)
+        res = ged(q, g, bound=bound, strategy=strategy)
+        assert res.ged == expected, (
+            f"{strategy}-{bound}: got {res.ged}, want {expected} (trial {trial})"
+        )
+
+
+@pytest.mark.parametrize("bound", ["BMaN", "SMa", "SM"])
+def test_search_matches_brute_force_slow_bounds(bound):
+    rng = np.random.default_rng(19)
+    for trial in range(5):
+        n = int(rng.integers(3, 6))
+        q = random_graph(rng, n, density=0.4, n_vlabels=3, n_elabels=2)
+        g = random_graph(rng, n, density=0.4, n_vlabels=3, n_elabels=2)
+        expected = brute_force_ged(q, g)
+        res = ged(q, g, bound=bound)
+        assert res.ged == expected
+
+
+def test_search_no_expand_all_matches():
+    rng = np.random.default_rng(23)
+    for trial in range(8):
+        n = int(rng.integers(3, 6))
+        q = random_graph(rng, n, density=0.4, n_vlabels=3, n_elabels=2)
+        g = random_graph(rng, n, density=0.4, n_vlabels=3, n_elabels=2)
+        expected = brute_force_ged(q, g)
+        for bound in ("LSa", "BMa"):
+            res = ged(q, g, bound=bound, expand_all=False)
+            assert res.ged == expected
+
+
+def test_search_paper_fig1(paper_fig1_pair):
+    q, g = paper_fig1_pair
+    for bound in BOUNDS:
+        res = ged(q, g, bound=bound)
+        assert res.ged == 3, bound
+
+
+def test_search_paper_fig3(paper_fig3_pair):
+    q, g = paper_fig3_pair
+    res = ged(q, g, bound="BMa")
+    assert res.ged == brute_force_ged(q, g)
+    assert res.ged <= 5  # paper: one 5-op script exists
+
+
+def test_best_mapping_cost_equals_ged():
+    rng = np.random.default_rng(29)
+    for trial in range(10):
+        q = random_graph(rng, 6, density=0.4)
+        g = perturb(rng, q, 3)
+        res = ged(q, g, bound="BMa")
+        qp, gp, _ = pad_pair(q, g)
+        assert editorial_cost(qp, gp, res.best_mapping) == res.ged
+
+
+def test_verification_agrees_with_computation():
+    rng = np.random.default_rng(31)
+    for trial in range(15):
+        n = int(rng.integers(3, 7))
+        q = random_graph(rng, n, density=0.4, n_vlabels=3, n_elabels=2)
+        g = random_graph(rng, n, density=0.4, n_vlabels=3, n_elabels=2)
+        d = ged(q, g, bound="BMa").ged
+        for tau in (d - 1, d, d + 1):
+            if tau < 0:
+                continue
+            for strategy in ("astar", "dfs"):
+                res = ged_verify(q, g, tau=tau, bound="BMa", strategy=strategy)
+                assert res.similar == (d <= tau), (
+                    f"tau={tau}, d={d}, strategy={strategy}"
+                )
+
+
+def test_astar_search_space_not_larger_than_dfs():
+    """Paper §5.3: T_{<=delta} subset of T_DFS (expanded-state counts)."""
+    rng = np.random.default_rng(37)
+    wins = 0
+    total = 0
+    for trial in range(10):
+        q = random_graph(rng, 7, density=0.35, n_vlabels=3, n_elabels=2)
+        g = perturb(rng, q, 4)
+        ra = ged(q, g, bound="LSa", strategy="astar")
+        rd = ged(q, g, bound="LSa", strategy="dfs")
+        assert ra.ged == rd.ged
+        total += 1
+        if ra.stats.best_extension_calls <= rd.stats.best_extension_calls:
+            wins += 1
+    assert wins >= total * 0.8  # overwhelmingly smaller or equal
+
+
+def test_tighter_bound_smaller_search_space():
+    rng = np.random.default_rng(41)
+    agg = {"LS": 0, "LSa": 0, "BMa": 0}
+    for trial in range(8):
+        q = random_graph(rng, 7, density=0.35, n_vlabels=3, n_elabels=2)
+        g = perturb(rng, q, 4)
+        res = {b: ged(q, g, bound=b) for b in ("LS", "LSa", "BMa")}
+        geds = {r.ged for r in res.values()}
+        assert len(geds) == 1
+        for b in agg:
+            agg[b] += res[b].stats.best_extension_calls
+    assert agg["BMa"] <= agg["LSa"] <= agg["LS"]
+
+
+def test_unequal_sizes_and_swap():
+    rng = np.random.default_rng(43)
+    for trial in range(8):
+        q = random_graph(rng, int(rng.integers(3, 5)), density=0.4)
+        g = random_graph(rng, int(rng.integers(5, 8)), density=0.3)
+        expected = brute_force_ged(q, g)
+        assert ged(q, g, bound="BMa").ged == expected
+        assert ged(g, q, bound="BMa").ged == expected  # symmetry
+
+
+def test_matching_order_is_permutation():
+    rng = np.random.default_rng(47)
+    for _ in range(10):
+        q = random_graph(rng, 9, density=0.3)
+        g = random_graph(rng, 9, density=0.3)
+        order = matching_order(q, g)
+        assert sorted(order.tolist()) == list(range(9))

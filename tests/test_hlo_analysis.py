@@ -1,0 +1,82 @@
+"""Unit tests for the trip-count-corrected HLO analyzer (no compiles)."""
+
+import textwrap
+
+from repro.launch.hlo_analysis import (analyze_hlo, parse_module,
+                                       _shape_bytes)
+
+
+MODULE = textwrap.dedent("""\
+    HloModule jit_step
+
+    %body (p: (s32[], f32[8,64])) -> (s32[], f32[8,64]) {
+      %p = (s32[], f32[8,64]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,64]{1,0} get-tuple-element(%p), index=1
+      %c1 = s32[] constant(1)
+      %ni = s32[] add(%i, %c1)
+      %w = f32[64,64]{1,0} constant({...})
+      %ag = f32[8,64]{0,1} all-gather(%x), channel_id=1, replica_groups={{0,1},{2,3}}, dimensions={1}
+      %d = f32[8,64]{1,0} dot(%ag, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      ROOT %t = (s32[], f32[8,64]{1,0}) tuple(%ni, %d)
+    }
+
+    %cond (pc: (s32[], f32[8,64])) -> pred[] {
+      %pc = (s32[], f32[8,64]{1,0}) parameter(0)
+      %ic = s32[] get-tuple-element(%pc), index=0
+      %n = s32[] constant(5)
+      ROOT %lt = pred[] compare(%ic, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,64]) -> f32[8,64] {
+      %a = f32[8,64]{1,0} parameter(0)
+      %z = s32[] constant(0)
+      %tup = (s32[], f32[8,64]{1,0}) tuple(%z, %a)
+      %wh = (s32[], f32[8,64]{1,0}) while(%tup), condition=%cond, body=%body
+      ROOT %out = f32[8,64]{1,0} get-tuple-element(%wh), index=1
+    }
+""")
+
+
+def test_parse_module_structure():
+    comps = parse_module(MODULE)
+    assert set(comps) == {"body", "cond", "main"}
+    assert comps["main"].is_entry
+    assert [i.opcode for i in comps["cond"].instrs][-1] == "compare"
+
+
+def test_trip_count_from_condition_and_flops():
+    out = analyze_hlo(MODULE)
+    # dot: 2*8*64*64 x 5 trips (condition-parse fallback path), + 5 adds
+    # in the body, + 6 compares in the condition (trip + 1 evaluations)
+    assert out["flops"] == 2 * 8 * 64 * 64 * 5 + 5 + 6
+    assert not out["warnings"]
+
+
+def test_collective_bytes_trip_multiplied():
+    out = analyze_hlo(MODULE)
+    assert out["collective_bytes"] == 8 * 64 * 4 * 5
+    assert out["collective_by_op"] == {"all-gather": 8 * 64 * 4 * 5}
+
+
+def test_backend_config_trip_count_preferred():
+    mod = MODULE.replace(
+        "condition=%cond, body=%body",
+        'condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}')
+    out = analyze_hlo(mod)
+    assert out["collective_bytes"] == 8 * 64 * 4 * 7
+
+
+def test_dcn_attribution():
+    out = analyze_hlo(MODULE, pod_boundary=2)   # groups {0,1},{2,3}: intra
+    assert out["dcn_bytes"] == 0
+    mod = MODULE.replace("replica_groups={{0,1},{2,3}}",
+                         "replica_groups={{0,2},{1,3}}")
+    out2 = analyze_hlo(mod, pod_boundary=2)     # crosses the boundary
+    assert out2["dcn_bytes"] == out2["collective_bytes"] > 0
+
+
+def test_shape_bytes_tuple_and_dtypes():
+    assert _shape_bytes("f32[8,64]{1,0}") == 8 * 64 * 4
+    assert _shape_bytes("(s32[], bf16[2,3]{1,0})") == 4 + 12
+    assert _shape_bytes("pred[2048]{0}") == 2048

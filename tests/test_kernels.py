@@ -1,0 +1,84 @@
+"""Pallas kernel sweeps: shapes/dtypes vs the pure-jnp oracles in ref.py."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.bma_cost_matrix import bma_cost_matrix_pallas
+from repro.kernels.reduced_top2 import reduced_top2_pallas
+
+
+def _bma_inputs(rng, b, n, le, vl=5, el=3):
+    qv = jnp.asarray(rng.integers(0, vl, (b, n)), jnp.int32)
+    gv = jnp.asarray(rng.integers(0, vl, (b, n)), jnp.int32)
+    iq = jnp.asarray(rng.integers(0, 4, (b, n, le)), jnp.float32)
+    ig = jnp.asarray(rng.integers(0, 4, (b, n, le)), jnp.float32)
+    qa = jnp.asarray(rng.integers(0, el, (b, n, n)), jnp.int32)
+    gc = jnp.asarray(rng.integers(0, el, (b, n, n)), jnp.int32)
+    pa = jnp.asarray(rng.integers(0, 2, (b, n)), jnp.float32)
+    return qv, gv, iq, ig, qa, gc, pa
+
+
+@pytest.mark.parametrize("b", [1, 3])
+@pytest.mark.parametrize("n", [8, 16, 32, 64])
+@pytest.mark.parametrize("le", [1, 2, 5])
+def test_bma_cost_matrix_kernel_sweep(b, n, le):
+    rng = np.random.default_rng(b * 100 + n + le)
+    args = _bma_inputs(rng, b, n, le)
+    got = bma_cost_matrix_pallas(*args, interpret=True)
+    want = ref.bma_cost_matrix_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("tile", [(8, 8), (16, 8), (8, 16)])
+def test_bma_cost_matrix_kernel_tilings(tile):
+    rng = np.random.default_rng(42)
+    args = _bma_inputs(rng, 2, 32, 3)
+    got = bma_cost_matrix_pallas(*args, tile_v=tile[0], tile_u=tile[1],
+                                 interpret=True)
+    want = ref.bma_cost_matrix_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b", [1, 4])
+@pytest.mark.parametrize("n", [8, 16, 64, 128])
+def test_reduced_top2_kernel_sweep(b, n):
+    rng = np.random.default_rng(b * 7 + n)
+    cost = jnp.asarray(rng.random((b, n, n)), jnp.float32)
+    prices = jnp.asarray(rng.random((b, n)) * 3, jnp.float32)
+    m1, a1, m2 = reduced_top2_pallas(cost, prices, interpret=True)
+    w1, wa, w2 = ref.reduced_top2_ref(cost, prices)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(w1), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(wa))
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(w2), rtol=1e-6)
+
+
+def test_reduced_top2_with_big_entries():
+    """BIG-masked (forbidden) entries must not confuse the top-2."""
+    rng = np.random.default_rng(0)
+    cost = rng.random((2, 16, 16)).astype(np.float32)
+    cost[:, :, ::3] = 1e7
+    cost = jnp.asarray(cost)
+    prices = jnp.zeros((2, 16), jnp.float32)
+    m1, a1, m2 = reduced_top2_pallas(cost, prices, interpret=True)
+    w1, wa, w2 = ref.reduced_top2_ref(cost, prices)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(w1))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(wa))
+
+
+def test_ops_wrappers_vmap_and_grad_safety():
+    """ops.* must work unbatched, batched, and under vmap."""
+    rng = np.random.default_rng(1)
+    b, n, le = 3, 16, 2
+    qv, gv, iq, ig, qa, gc, pa = _bma_inputs(rng, b, n, le)
+    ga = gc  # treat as adjacency; ops gathers internally
+    img = jnp.asarray(rng.integers(0, n, (b, n)), jnp.int32)
+    full = ops.bma_cost_matrix(qv, gv, iq, ig, qa, ga, img, pa)
+    single = ops.bma_cost_matrix(qv[0], gv[0], iq[0], ig[0], qa[0], ga[0],
+                                 img[0], pa[0])
+    np.testing.assert_allclose(np.asarray(full[0]), np.asarray(single))
+    vm = jax.vmap(ops.bma_cost_matrix)(qv, gv, iq, ig, qa, ga, img, pa)
+    np.testing.assert_allclose(np.asarray(vm), np.asarray(full))

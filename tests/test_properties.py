@@ -1,0 +1,151 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.exact.assignment import brute_force_assignment, hungarian
+from repro.core.exact.bounds import PairContext, remaining_lower_bound
+from repro.core.exact.brute import brute_force_ged
+from repro.core.exact.graph import Graph, editorial_cost, pad_pair
+from repro.core.exact.multiset import hist_edit_distance, multiset_edit_distance
+from repro.core.exact.order import matching_order
+from repro.core.exact.search import ged, ged_verify
+
+
+# ------------------------------------------------------------- strategies
+@st.composite
+def graphs(draw, max_n=6, n_vlabels=3, n_elabels=2):
+    n = draw(st.integers(min_value=1, max_value=max_n))
+    vlabels = draw(st.lists(st.integers(0, n_vlabels - 1), min_size=n, max_size=n))
+    adj = np.zeros((n, n), dtype=np.int64)
+    for i in range(n):
+        for j in range(i + 1, n):
+            e = draw(st.integers(0, n_elabels))
+            adj[i, j] = adj[j, i] = e
+    return Graph(np.asarray(vlabels), adj)
+
+
+small_multisets = st.lists(st.integers(0, 4), min_size=0, max_size=8)
+
+
+# ---------------------------------------------------------------- multiset
+@given(small_multisets, small_multisets)
+def test_multiset_edit_distance_is_metric(s1, s2):
+    d = multiset_edit_distance(s1, s2)
+    assert d >= 0
+    assert d == multiset_edit_distance(s2, s1)
+    assert (d == 0) == (sorted(s1) == sorted(s2))
+
+
+@given(small_multisets, small_multisets, small_multisets)
+def test_multiset_edit_distance_triangle(s1, s2, s3):
+    d12 = multiset_edit_distance(s1, s2)
+    d23 = multiset_edit_distance(s2, s3)
+    d13 = multiset_edit_distance(s1, s3)
+    assert d13 <= d12 + d23
+
+
+@given(small_multisets, small_multisets, small_multisets, small_multisets)
+def test_multiset_union_subadditivity(s1, s2, t1, t2):
+    """Lemma A.1: Y(S1 u T1, S2 u T2) <= Y(S1, S2) + Y(T1, T2)."""
+    lhs = multiset_edit_distance(s1 + t1, s2 + t2)
+    rhs = multiset_edit_distance(s1, s2) + multiset_edit_distance(t1, t2)
+    assert lhs <= rhs
+
+
+@given(small_multisets, small_multisets)
+def test_hist_edit_distance_agrees(s1, s2):
+    h1 = np.bincount(np.asarray(s1, dtype=np.int64), minlength=5)
+    h2 = np.bincount(np.asarray(s2, dtype=np.int64), minlength=5)
+    assert hist_edit_distance(h1, h2) == multiset_edit_distance(s1, s2)
+
+
+# -------------------------------------------------------------- assignment
+@given(st.integers(1, 5), st.data())
+@settings(max_examples=40, deadline=None)
+def test_hungarian_optimal(n, data):
+    cost = np.array(
+        data.draw(
+            st.lists(
+                st.lists(st.integers(0, 10), min_size=n, max_size=n),
+                min_size=n, max_size=n,
+            )
+        ),
+        dtype=float,
+    )
+    col, total = hungarian(cost)
+    _, bf = brute_force_assignment(cost)
+    assert abs(total - bf) < 1e-9
+    assert sorted(col.tolist()) == list(range(n))
+
+
+# ------------------------------------------------------------------ GED
+@given(graphs(max_n=4), graphs(max_n=4))
+@settings(max_examples=25, deadline=None)
+def test_ged_is_metric_like(q, g):
+    d_qg = ged(q, g, bound="BMa").ged
+    d_gq = ged(g, q, bound="BMa").ged
+    assert d_qg == d_gq  # symmetry
+    assert d_qg >= 0
+    if d_qg == 0:
+        # 0 distance -> brute force agrees they are isomorphic
+        assert brute_force_ged(q, g) == 0
+
+
+@given(graphs(max_n=4), graphs(max_n=4), graphs(max_n=4))
+@settings(max_examples=15, deadline=None)
+def test_ged_triangle_inequality(q, g, h):
+    d_qg = ged(q, g, bound="BMa").ged
+    d_gh = ged(g, h, bound="BMa").ged
+    d_qh = ged(q, h, bound="BMa").ged
+    assert d_qh <= d_qg + d_gh
+
+
+@given(graphs(max_n=5), graphs(max_n=5))
+@settings(max_examples=30, deadline=None)
+def test_all_bounds_and_strategies_agree(q, g):
+    results = set()
+    for bound in ("LS", "LSa", "BMa"):
+        for strategy in ("astar", "dfs"):
+            results.add(ged(q, g, bound=bound, strategy=strategy).ged)
+    assert len(results) == 1
+    assert results.pop() == brute_force_ged(q, g)
+
+
+@given(graphs(max_n=5), graphs(max_n=5), st.integers(0, 8))
+@settings(max_examples=30, deadline=None)
+def test_verification_consistent_with_ged(q, g, tau):
+    d = brute_force_ged(q, g)
+    res = ged_verify(q, g, tau=tau, bound="BMa")
+    assert res.similar == (d <= tau)
+
+
+@given(graphs(max_n=5), graphs(max_n=5), st.data())
+@settings(max_examples=30, deadline=None)
+def test_root_bounds_lower_bound_true_ged(q, g, data):
+    """Whole-state bounds at the root must lower-bound the true GED."""
+    qp, gp, _ = pad_pair(q, g)
+    order = matching_order(qp, gp)
+    ctx = PairContext(qp, gp, order)
+    d = brute_force_ged(q, g)
+    for kind in ("LS", "LSa", "BM", "BMa", "SM", "SMa"):
+        lb = remaining_lower_bound(ctx, (), kind)
+        assert lb <= d + 1e-9, f"{kind}: {lb} > {d}"
+
+
+@given(graphs(max_n=5))
+@settings(max_examples=20, deadline=None)
+def test_self_distance_zero(g):
+    assert ged(g, g, bound="BMa").ged == 0
+    assert ged(g, g, bound="LS", strategy="dfs").ged == 0
+
+
+@given(graphs(max_n=5), st.data())
+@settings(max_examples=25, deadline=None)
+def test_editorial_cost_upper_bounds_ged(g, data):
+    q = data.draw(graphs(max_n=5))
+    qp, gp, _ = pad_pair(q, g)
+    n = gp.n
+    perm = data.draw(st.permutations(list(range(n))))
+    cost = editorial_cost(qp, gp, np.asarray(perm))
+    assert ged(q, g, bound="BMa").ged <= cost

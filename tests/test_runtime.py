@@ -1,0 +1,115 @@
+"""Fault-tolerant loop: injected failures recover with exact replay;
+straggler scheduler invariants."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime import FaultInjector, GedScheduler, difficulty, train_loop
+from repro.runtime.scheduler import ESCALATION_RUNGS
+
+
+def _toy_problem():
+    """Deterministic quadratic: state is a vector, batch is data index."""
+    import jax, jax.numpy as jnp
+
+    target = jnp.asarray(np.linspace(-1, 1, 8), jnp.float32)
+
+    @jax.jit
+    def step(w, batch):
+        x = jnp.asarray(batch, jnp.float32)
+        loss = jnp.mean((w - target) ** 2) + 0.0 * x.sum()
+        g = 2 * (w - target) / w.size
+        w = w - 0.1 * g
+        return w, {"loss": loss}
+
+    def make_pipeline(start):
+        def gen():
+            k = start
+            while True:
+                yield np.full((2,), k)
+                k += 1
+        return gen()
+
+    return step, make_pipeline
+
+
+def _run(tmp_path, faults, steps=30):
+    import jax.numpy as jnp
+    step, make_pipeline = _toy_problem()
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+    w0 = jnp.zeros((8,), jnp.float32)
+    w, hist = train_loop(step, w0, make_pipeline, ckpt, total_steps=steps,
+                         ckpt_every=10, injector=FaultInjector(faults),
+                         log_every=1)
+    return np.asarray(w), [h["loss"] for h in hist]
+
+
+def test_fault_recovery_exact_replay(tmp_path):
+    w_clean, h_clean = _run(tmp_path / "clean", faults=[])
+    w_fault, h_fault = _run(tmp_path / "fault", faults=[15, 25])
+    np.testing.assert_array_equal(w_clean, w_fault)
+    assert h_clean == h_fault
+
+
+def test_fault_before_first_checkpoint_raises(tmp_path):
+    with pytest.raises(RuntimeError):
+        _run(tmp_path, faults=[3])
+
+
+def test_too_many_faults_raises(tmp_path):
+    step, make_pipeline = _toy_problem()
+    import jax.numpy as jnp
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+
+    class Always(FaultInjector):
+        def maybe_fail(self, step):
+            if step == 15:
+                from repro.runtime import SimulatedFault
+                raise SimulatedFault("again")
+
+    with pytest.raises(RuntimeError):
+        train_loop(step, jnp.zeros((8,)), make_pipeline, ckpt,
+                   total_steps=30, ckpt_every=10, injector=Always([]),
+                   max_restarts=3)
+
+
+# ------------------------------------------------------------- scheduler
+
+def test_lpt_packing_balances_load(rng):
+    sched = GedScheduler(batch_size=8)
+    diffs = list(rng.lognormal(0, 2.0, size=64))       # heavy tail
+    batches = sched.pack(diffs)
+    assert sum(len(b.indices) for b in batches) == 64
+    assert all(len(b.indices) <= 8 for b in batches)
+    seen = sorted(i for b in batches for i in b.indices)
+    assert seen == list(range(64))
+    loads = [b.predicted for b in batches]
+    naive = [sum(diffs[i] for i in range(k, min(k + 8, 64)))
+             for k in range(0, 64, 8)]
+    assert (max(loads) - min(loads)) <= (max(naive) - min(naive)) + 1e-9
+
+
+def test_difficulty_monotone_in_size():
+    l5 = [0, 1, 2, 3, 4]
+    d_small = difficulty(8, 8, 10, 10, l5, l5)
+    d_big = difficulty(24, 24, 60, 60, l5, l5)
+    assert d_big > d_small
+
+
+def test_difficulty_easier_when_tau_rejects_cheaply():
+    l5 = [0, 1, 2, 3, 4]
+    # huge size gap vs tau -> cheap reject -> lower predicted effort
+    d_cheap = difficulty(10, 20, 10, 60, l5, l5, tau=2.0)
+    d_hard = difficulty(10, 11, 10, 12, l5, l5, tau=12.0)
+    assert d_cheap < d_hard
+
+
+def test_escalation_rungs_grow():
+    pools = [r[0] for r in ESCALATION_RUNGS]
+    assert pools == sorted(pools) and len(set(pools)) == len(pools)
+    sched = GedScheduler(batch_size=4)
+    b = sched.pack([1.0] * 4)[0]
+    nxt = sched.escalate(b, [0, 2])
+    assert nxt.rung == 1 and len(nxt.indices) == 2
+    assert sched.engine_params(len(ESCALATION_RUNGS)) is None

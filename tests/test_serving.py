@@ -1,0 +1,84 @@
+"""Serving layer: GED verification service correctness + LM generation."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.exact.search import ged as exact_ged
+from repro.data.graphs import perturb, random_graph
+from repro.models.config import reduced
+from repro.models.params import init_params
+from repro.serving import GedRequest, GedVerificationService, generate
+
+
+@pytest.fixture(scope="module")
+def request_set():
+    rng = np.random.default_rng(7)
+    reqs, truths = [], []
+    for _ in range(24):
+        q = random_graph(rng, int(rng.integers(6, 11)))
+        g = perturb(rng, q, int(rng.integers(1, 6)))
+        true_ged = exact_ged(q, g, bound="BMa").ged
+        tau = float(rng.integers(1, 7))
+        reqs.append(GedRequest(q, g, tau))
+        truths.append(true_ged)
+    return reqs, truths
+
+
+def test_verification_matches_exact(request_set):
+    reqs, truths = request_set
+    svc = GedVerificationService(batch_size=8, slots=16)
+    results = svc.verify(reqs)
+    assert len(results) == len(reqs)
+    for r, req, t in zip(results, reqs, truths):
+        assert r.certified
+        assert r.similar == (t <= req.tau), (t, req.tau, r)
+    assert svc.stats["pairs"] == len(reqs)
+
+
+def test_computation_matches_exact(request_set):
+    reqs, truths = request_set
+    svc = GedVerificationService(batch_size=8, slots=16)
+    results = svc.compute([(r.q, r.g) for r in reqs[:10]])
+    for r, t in zip(results, truths[:10]):
+        assert r.certified and r.ged == pytest.approx(t), (r.ged, t)
+
+
+def test_escalation_path_used_for_hard_pairs():
+    """Tiny first-rung budget forces escalation; answers stay exact."""
+    rng = np.random.default_rng(11)
+    reqs, truths = [], []
+    for _ in range(6):
+        q = random_graph(rng, 10, density=0.35)
+        g = perturb(rng, q, 6)
+        truths.append(exact_ged(q, g, bound="BMa").ged)
+        reqs.append(GedRequest(q, g, tau=4.0))
+    svc = GedVerificationService(batch_size=6, slots=16)
+    svc.scheduler.rungs = ((8, 2, 4),)      # absurdly small engine budget
+    results = svc.verify(reqs)
+    assert svc.stats["escalated"] + svc.stats["host_solved"] > 0
+    for r, req, t in zip(results, reqs, truths):
+        assert r.certified and r.similar == (t <= req.tau)
+
+
+def test_lm_generate_runs():
+    cfg = reduced(get_arch("qwen3-8b"))
+    cfg = dataclasses.replace(cfg, remat="none", compute_dtype="float32")
+    params = init_params(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, size=(2, 8)).astype(np.int32)
+    out = generate(params, prompt, cfg, max_new=4, impl="naive")
+    assert out.shape == (2, 4)
+    assert np.all((out >= 0) & (out < cfg.vocab))
+
+
+def test_lm_generate_ssm_runs():
+    cfg = reduced(get_arch("rwkv6-3b"))
+    cfg = dataclasses.replace(cfg, remat="none", compute_dtype="float32")
+    params = init_params(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, size=(1, 8)).astype(np.int32)
+    out = generate(params, prompt, cfg, max_new=4, impl="naive")
+    assert out.shape == (1, 4)
