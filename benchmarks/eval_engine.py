@@ -4,7 +4,8 @@ throughput, strategy/bound ablations, and Pallas-kernel validation.
 This is the beyond-paper half of the harness: the paper's AStar+ is a
 sequential heap algorithm; the engine runs thousands of pairs in lockstep
 on one device (and data-parallel across the mesh at scale — see the
-``ged-verify`` dry-run rows).
+``ged-verify`` dry-run rows).  Everything here goes through the public
+``repro.ged`` facade — the same door serving traffic uses.
 """
 
 from __future__ import annotations
@@ -16,10 +17,8 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.common import groups, print_table, record, timed
-from repro.core.engine.api import ged_batch, verify_batch
-from repro.core.engine.search import EngineConfig
-from repro.core.engine.tensor_graphs import pack_pairs
 from repro.core.exact.search import ged as exact_ged
+from repro.ged import GedEngine
 
 
 def _flat_pairs(gs, max_pairs=60):
@@ -27,23 +26,31 @@ def _flat_pairs(gs, max_pairs=60):
     return pairs[:max_pairs]
 
 
+def _engine(**overrides) -> GedEngine:
+    opts = dict(slots=16, pool=512, expand=8, max_iters=512,
+                bound="hybrid", strategy="astar")
+    opts.update(overrides)
+    return GedEngine(opts.pop("backend", "jax"), **opts)
+
+
+def _mean_stat(outs, key) -> float:
+    return float(np.mean([o.stats[key] for o in outs]))
+
+
 def engine_agreement_and_throughput(quick=True) -> List[Dict]:
     """Certified-exact agreement with the reference + pairs/s."""
     gs = groups(quick, pairs_per_group=3)
     pairs = _flat_pairs(gs)
     truth = [exact_ged(q, g, bound="BMa").ged for q, g in pairs]
-    packed = pack_pairs(pairs, slots=16)
 
     rows = []
     for strategy in ("astar", "dfs"):
-        cfg = EngineConfig(pool=512, expand=8, max_iters=512,
-                           bound="hybrid", strategy=strategy,
-                           use_kernel=False)
-        out, dt_warm = timed(ged_batch, packed, cfg)       # includes compile
-        out2, dt = timed(ged_batch, packed, cfg)           # steady state
-        certified = out2["exact"].astype(bool)
-        agree = [int(round(float(o))) == t
-                 for o, t, c in zip(out2["ged"], truth, certified) if c]
+        eng = _engine(strategy=strategy)
+        outs, dt_warm = timed(eng.compute, pairs)          # includes compile
+        outs, dt = timed(eng.compute, pairs)               # steady state
+        certified = np.array([o.certified for o in outs])
+        agree = [int(round(o.ged)) == t
+                 for o, t in zip(outs, truth) if o.certified]
         rows.append({
             "strategy": strategy,
             "pairs": len(pairs),
@@ -51,7 +58,7 @@ def engine_agreement_and_throughput(quick=True) -> List[Dict]:
             "agree_frac_of_certified": float(np.mean(agree)) if agree else 0.0,
             "pairs_per_s": len(pairs) / dt,
             "compile_s": dt_warm - dt,
-            "mean_iters": float(np.mean(out2["iterations"])),
+            "mean_iters": _mean_stat(outs, "iterations"),
         })
         assert all(agree), "certified engine answers must match the oracle"
     print_table("Engine vs exact (computation)", rows,
@@ -65,22 +72,18 @@ def engine_verification(quick=True) -> List[Dict]:
     gs = groups(quick, pairs_per_group=3)
     pairs = _flat_pairs(gs)
     truth = [exact_ged(q, g, bound="BMa").ged for q, g in pairs]
-    packed = pack_pairs(pairs, slots=16)
     rows = []
     for tau in (3.0, 6.0, 9.0):
-        cfg = EngineConfig(pool=512, expand=8, max_iters=512,
-                           bound="hybrid", strategy="astar",
-                           use_kernel=False)
-        taus = [tau] * len(pairs)
-        out, _ = timed(verify_batch, packed, taus, cfg)
-        out, dt = timed(verify_batch, packed, taus, cfg)
-        cert = out["exact"].astype(bool)
-        ok = [bool(s) == (t <= tau)
-              for s, t, c in zip(out["similar"], truth, cert) if c]
+        eng = _engine()
+        outs, _ = timed(eng.verify, pairs, tau)
+        outs, dt = timed(eng.verify, pairs, tau)
+        cert = np.array([o.certified for o in outs])
+        ok = [o.similar == (t <= tau)
+              for o, t in zip(outs, truth) if o.certified]
         rows.append({"tau": tau, "pairs_per_s": len(pairs) / dt,
                      "certified_frac": float(np.mean(cert)),
                      "agree": float(np.mean(ok)) if ok else 0.0,
-                     "mean_iters": float(np.mean(out["iterations"]))})
+                     "mean_iters": _mean_stat(outs, "iterations")})
         assert all(ok)
     print_table("Engine verification (vary tau)", rows,
                 ["tau", "pairs_per_s", "certified_frac", "agree",
@@ -94,18 +97,17 @@ def engine_bound_ablation(quick=True) -> List[Dict]:
     the tensor analogue of the paper's search-space metric."""
     gs = groups(quick, pairs_per_group=3)
     pairs = _flat_pairs(gs, max_pairs=36)
-    packed = pack_pairs(pairs, slots=16)
     rows = []
     for bound in ("lsa", "bma", "hybrid"):
-        cfg = EngineConfig(pool=512, expand=8, max_iters=512, bound=bound,
-                           strategy="astar", use_kernel=False)
-        out, _ = timed(ged_batch, packed, cfg)
-        out, dt = timed(ged_batch, packed, cfg)
+        eng = _engine(bound=bound)
+        outs, _ = timed(eng.compute, pairs)
+        outs, dt = timed(eng.compute, pairs)
         rows.append({"bound": bound,
-                     "mean_iters": float(np.mean(out["iterations"])),
-                     "mean_expanded": float(np.mean(out["expanded"])),
+                     "mean_iters": _mean_stat(outs, "iterations"),
+                     "mean_expanded": _mean_stat(outs, "expanded"),
                      "pairs_per_s": len(pairs) / dt,
-                     "certified_frac": float(np.mean(out["exact"]))})
+                     "certified_frac":
+                         float(np.mean([o.certified for o in outs]))})
     by = {r["bound"]: r["mean_expanded"] for r in rows}
     assert by["hybrid"] <= by["lsa"] * 1.05, \
         "tighter bound must not expand more states"
@@ -129,23 +131,20 @@ def engine_sweeps_ablation(quick=True) -> List[Dict]:
     """
     gs = groups(quick, pairs_per_group=3)
     pairs = _flat_pairs(gs, max_pairs=36)
-    packed = pack_pairs(pairs, slots=16)
     truth = [exact_ged(q, g, bound="BMa").ged for q, g in pairs]
     rows = []
     for sweeps in (2, 6, 12):
-        cfg = EngineConfig(pool=512, expand=8, max_iters=512,
-                           bound="bma", sweeps=sweeps, strategy="astar",
-                           use_kernel=False)
-        out, _ = timed(ged_batch, packed, cfg)
-        out, dt = timed(ged_batch, packed, cfg)
-        cert = out["exact"].astype(bool)
-        agree = [int(round(float(o))) == t
-                 for o, t, c in zip(out["ged"], truth, cert) if c]
+        eng = _engine(bound="bma", sweeps=sweeps)
+        outs, _ = timed(eng.compute, pairs)
+        outs, dt = timed(eng.compute, pairs)
+        agree = [int(round(o.ged)) == t
+                 for o, t in zip(outs, truth) if o.certified]
         assert all(agree), f"sweeps={sweeps}: certified answer wrong"
         rows.append({"sweeps": sweeps,
-                     "mean_expanded": float(np.mean(out["expanded"])),
+                     "mean_expanded": _mean_stat(outs, "expanded"),
                      "pairs_per_s": len(pairs) / dt,
-                     "certified_frac": float(np.mean(cert))})
+                     "certified_frac":
+                         float(np.mean([o.certified for o in outs]))})
     print_table("Engine auction-sweeps ablation (admissible at every "
                 "sweep count)", rows,
                 ["sweeps", "mean_expanded", "pairs_per_s",
@@ -211,11 +210,9 @@ def scheduler_cost_model(quick=True) -> List[Dict]:
 
     gs = groups(quick, pairs_per_group=4)
     pairs = _flat_pairs(gs, max_pairs=48)
-    packed = pack_pairs(pairs, slots=16)
-    cfg = EngineConfig(pool=512, expand=8, max_iters=512, bound="hybrid",
-                       strategy="astar", use_kernel=False)
-    out, _ = timed(ged_batch, packed, cfg)
-    iters = np.asarray(out["iterations"], np.float64)
+    eng = _engine()
+    outs, _ = timed(eng.compute, pairs)
+    iters = np.asarray([o.stats["iterations"] for o in outs], np.float64)
 
     diffs = [difficulty(q.n, g.n, q.m, g.m, q.vlabels, g.vlabels)
              for q, g in pairs]

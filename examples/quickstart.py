@@ -1,15 +1,16 @@
-"""Quickstart: GED computation and verification with both engines.
+"""Quickstart: one front door for GED — ``repro.ged``.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py   # or pip install -e .
+
+Every entry point — module-level one-shots, a configured ``GedEngine``,
+or streaming ``submit``/``flush`` — returns the same ``GedOutcome``
+schema, whichever backend answered.
 """
 
 import numpy as np
 
+from repro import ged
 from repro.core.exact.graph import Graph
-from repro.core.exact.search import ged, ged_verify
-from repro.core.engine.api import ged_batch, verify_batch
-from repro.core.engine.search import EngineConfig
-from repro.core.engine.tensor_graphs import pack_pairs
 
 # --- build the paper's Figure 3 pair ---------------------------------------
 A, B, C = 0, 1, 2
@@ -20,13 +21,19 @@ g = Graph.from_edges([B, B, B, B, C],
                      [(0, 1, a), (1, 2, b), (2, 3, b), (1, 3, b),
                       (0, 4, b), (3, 4, a)])
 
-# --- paper-faithful reference: AStar+-BMa (Alg. 2 + §4 bounds) --------------
-res = ged(q, g, bound="BMa", strategy="astar")
-print(f"exact engine  : delta(q, g) = {res.ged}  "
-      f"(search space = {res.stats.best_extension_calls} best-extension calls)")
+# --- one-shot, paper-faithful host solver (AStar+-BMa, Alg. 2 + §4) --------
+[ref] = ged.compute([(q, g)], backend="exact")
+print(f"exact backend : delta(q, g) = {ref.ged}  "
+      f"(certified={ref.certified}, mapping={ref.mapping})")
 
-res_v = ged_verify(q, g, tau=5.0, bound="BMa")
-print(f"verification  : delta(q, g) <= 5 ? {res_v.similar}")
+[ver] = ged.verify([(q, g)], tau=5.0, backend="exact")
+print(f"verification  : delta(q, g) <= 5 ? {ver.similar}")
+
+# --- graphs don't have to be Graph objects ---------------------------------
+# (vlabels, edges) tuples and adjacency dicts are ingested automatically
+q_edges = ([A, B, B, B], [(0, 1, a), (1, 2, a), (2, 3, b), (1, 3, b)])
+[same] = ged.compute([(q_edges, g)], backend="exact")
+assert same.ged == ref.ged
 
 # --- batched JAX engine: same answers, thousands of pairs at once ----------
 rng = np.random.default_rng(0)
@@ -36,15 +43,25 @@ for _ in range(15):
     qq = random_graph(rng, 10)
     pairs.append((qq, perturb(rng, qq, 3)))
 
-packed = pack_pairs(pairs, slots=16)
-out = ged_batch(packed, EngineConfig(pool=512, expand=8, use_kernel=False))
-print(f"\nbatched engine: {len(pairs)} pairs in one jit call")
-print("  ged      :", [int(x) for x in out["ged"][:8]], "...")
-print("  certified:", [bool(x) for x in out["exact"][:8]], "...")
+engine = ged.GedEngine(backend="jax", pool=512, expand=8)
+outs = engine.compute(pairs)
+print(f"\njax backend   : {len(pairs)} pairs, bucketed into power-of-two "
+      f"shapes ({engine.stats})")
+print("  ged      :", [int(o.ged) for o in outs[:8]], "...")
+print("  certified:", [o.certified for o in outs[:8]], "...")
 
-taus = [4.0] * len(pairs)
-ver = verify_batch(packed, taus, EngineConfig(pool=256, expand=4,
-                                              use_kernel=False))
-print("  <= 4?    :", [bool(x) for x in ver["similar"][:8]], "...")
-assert int(out["ged"][0]) == res.ged
-print("\nbatched engine agrees with the paper-faithful reference ✓")
+vers = engine.verify(pairs, tau=4.0)
+print("  <= 4?    :", [o.similar for o in vers[:8]], "...")
+
+# --- streaming: mix computation and verification, flush once ---------------
+engine.submit(q, g)                  # computation ticket 0
+engine.submit(q, g, tau=4.0)         # verification ticket 1
+t0, t1 = engine.flush()
+print(f"\nstreaming     : ged={t0.ged}, <=4? {t1.similar}")
+
+# --- the escalating production pipeline (always certified) -----------------
+auto = ged.GedEngine(backend="auto", batch_size=8)
+assert all(o.certified for o in auto.compute(pairs))
+
+assert int(outs[0].ged) == ref.ged
+print("\nall backends agree through one facade ✓")

@@ -1,10 +1,11 @@
 """Graph similarity search over a database — the paper's target application
-(§1, §5.3), end to end through the serving stack.
+(§1, §5.3), end to end through the ``repro.ged`` facade.
 
-A query graph is checked against a database of molecules; the service
-predicts per-pair difficulty, LPT-packs batches (straggler mitigation),
-runs the batched AStar+ engine, and escalates uncertified pairs up to the
-paper-faithful host solver.  Every returned verdict is certified exact.
+A query graph is checked against a database of molecules via
+``GedEngine(backend="auto")``: the pipeline predicts per-pair difficulty,
+LPT-packs batches (straggler mitigation), runs the batched AStar+ engine,
+and escalates uncertified pairs up to the paper-faithful host solver.
+Every returned verdict is certified exact.
 
     PYTHONPATH=src python examples/similarity_search.py
 """
@@ -14,7 +15,7 @@ import time
 import numpy as np
 
 from repro.data.graphs import aids_like_graph, perturb
-from repro.serving import GedRequest, GedVerificationService
+from repro.ged import GedEngine
 
 rng = np.random.default_rng(1)
 
@@ -28,10 +29,10 @@ for _ in range(20):                       # planted near-duplicates
                       n_vlabels=62, n_elabels=3))
 
 TAU = 4.0
-svc = GedVerificationService(batch_size=32, slots=16)
+engine = GedEngine(backend="auto", batch_size=32, slots=16)
 
 t0 = time.time()
-results = svc.verify([GedRequest(query, g, TAU) for g in DB])
+results = engine.verify([(query, g) for g in DB], tau=TAU)
 dt = time.time() - t0
 
 hits = [i for i, r in enumerate(results) if r.similar]
@@ -40,7 +41,7 @@ print(f"tau            : {TAU}")
 print(f"similar graphs : {len(hits)} -> indices {hits[:12]}{'...' if len(hits) > 12 else ''}")
 print(f"wall time      : {dt:.2f}s ({len(DB)/dt:.1f} pairs/s, single CPU)")
 print(f"all certified  : {all(r.certified for r in results)}")
-print(f"service stats  : {svc.stats}")
+print(f"engine stats   : {engine.stats}")
 
 # sanity: the planted near-duplicates with few edits should be among hits
 planted = set(range(60, 80))

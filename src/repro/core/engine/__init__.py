@@ -7,7 +7,8 @@ tensor programs (see DESIGN.md §2):
 * ``bounds``        — batched anchor-aware bound components (histogram algebra)
 * ``auction``       — Bertsekas auction with LP-dual *admissible* lower bounds
 * ``search``        — device-resident frontier search (``lax.while_loop``)
-* ``api``           — ``ged_batch`` / ``verify_batch`` (+ shard_map wrappers)
+* ``api``           — deprecated ``ged_batch`` / ``verify_batch`` shims; the
+  public entry point is the ``repro.ged`` facade
 """
 
 from repro.core.engine.tensor_graphs import GraphPairTensors, pack_pairs

@@ -1,4 +1,11 @@
-"""Public batched API: ``ged_batch`` / ``verify_batch``.
+"""Batched engine entry points.
+
+.. deprecated::
+    ``ged_batch`` / ``verify_batch`` are kept as thin shims for existing
+    callers; new code should go through the facade in :mod:`repro.ged`
+    (``repro.ged.GedEngine`` / ``repro.ged.compute``), which adds input
+    adapters, slot bucketing with compile-cache reuse, backend selection and
+    the unified ``GedOutcome`` result schema.
 
 Pairs are data-parallel: ``vmap`` on one device; ``shard_map`` over the mesh
 (``pod`` x ``data`` x ``model`` all carry pairs) at scale — see
@@ -8,6 +15,7 @@ Pairs are data-parallel: ``vmap`` on one device; ``shard_map`` over the mesh
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -17,16 +25,34 @@ import numpy as np
 from repro.core.engine.search import EngineConfig, run_pair
 from repro.core.engine.tensor_graphs import GraphPairTensors, pack_pairs
 
+# Number of times ``_run_batch`` has been *traced* (compiled) this process.
+# The increment below runs only while JAX traces the function, so bucketed
+# workloads that reuse a compilation do not bump it — ``repro.ged.plan``'s
+# bucketing tests assert on this.
+_RUN_BATCH_TRACES = 0
 
-def _pair_tuple(t: GraphPairTensors):
+
+def run_batch_traces() -> int:
+    """How many distinct compilations of the batch kernel exist."""
+    return _RUN_BATCH_TRACES
+
+
+def pair_tuple(t: GraphPairTensors):
+    """Device-array argument tuple for ``_run_batch``."""
     return (jnp.asarray(t.qv), jnp.asarray(t.gv), jnp.asarray(t.qa),
             jnp.asarray(t.ga), jnp.asarray(t.order), jnp.asarray(t.n))
+
+
+_pair_tuple = pair_tuple  # backwards-compatible private alias
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "verification",
                                              "n_vlabels", "n_elabels"))
 def _run_batch(qv, gv, qa, ga, order, n, taus, cfg: EngineConfig,
                verification: bool, n_vlabels: int, n_elabels: int):
+    global _RUN_BATCH_TRACES
+    _RUN_BATCH_TRACES += 1  # trace-time side effect: counts compilations
+
     def one(qv, gv, qa, ga, order, n, tau):
         return run_pair((qv, gv, qa, ga, order, n, n_vlabels, n_elabels),
                         cfg, tau, verification)
@@ -36,8 +62,14 @@ def _run_batch(qv, gv, qa, ga, order, n, taus, cfg: EngineConfig,
 
 def ged_batch(pairs: GraphPairTensors, cfg: EngineConfig = EngineConfig()
               ) -> Dict[str, np.ndarray]:
-    """Exact-with-certificate GED for a batch of pairs."""
-    args = _pair_tuple(pairs)
+    """Exact-with-certificate GED for a batch of pairs.
+
+    .. deprecated:: use ``repro.ged.GedEngine(backend="jax").compute``.
+    """
+    warnings.warn(
+        "ged_batch is deprecated; use repro.ged.GedEngine / repro.ged.compute",
+        DeprecationWarning, stacklevel=2)
+    args = pair_tuple(pairs)
     taus = jnp.zeros((pairs.batch,), dtype=jnp.float32)
     out = _run_batch(*args, taus, cfg, False, pairs.n_vlabels, pairs.n_elabels)
     out = {k: np.asarray(v) for k, v in out.items()}
@@ -47,8 +79,14 @@ def ged_batch(pairs: GraphPairTensors, cfg: EngineConfig = EngineConfig()
 
 def verify_batch(pairs: GraphPairTensors, taus: Sequence[float],
                  cfg: EngineConfig = EngineConfig()) -> Dict[str, np.ndarray]:
-    """Batched GED verification: ``delta(q, g) <= tau``? per pair."""
-    args = _pair_tuple(pairs)
+    """Batched GED verification: ``delta(q, g) <= tau``? per pair.
+
+    .. deprecated:: use ``repro.ged.GedEngine(backend="jax").verify``.
+    """
+    warnings.warn(
+        "verify_batch is deprecated; use repro.ged.GedEngine / repro.ged.verify",
+        DeprecationWarning, stacklevel=2)
+    args = pair_tuple(pairs)
     taus = jnp.asarray(np.asarray(taus, dtype=np.float32))
     out = _run_batch(*args, taus, cfg, True, pairs.n_vlabels, pairs.n_elabels)
     return {k: np.asarray(v) for k, v in out.items()}

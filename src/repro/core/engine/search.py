@@ -241,6 +241,8 @@ def run_pair(pair: Tuple, cfg: EngineConfig, tau: jnp.ndarray,
         return {
             "similar": similar,
             "exact": exact,
+            "lower_bound": jnp.where(similar, jnp.float32(0.0),
+                                     jnp.minimum(min_lb_end, final.floor)),
             "upper_bound": final.ub,
             "iterations": final.it,
             "expanded": final.expanded,
@@ -249,6 +251,9 @@ def run_pair(pair: Tuple, cfg: EngineConfig, tau: jnp.ndarray,
     return {
         "ged": ged_val,
         "exact": exact,
+        "lower_bound": jnp.minimum(jnp.minimum(min_lb_end, final.floor),
+                                   final.ub),
+        "upper_bound": final.ub,
         "iterations": final.it,
         "expanded": final.expanded,
         "best_img": final.best_img,

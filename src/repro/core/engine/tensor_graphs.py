@@ -49,25 +49,52 @@ class GraphPairTensors:
         )
 
 
+def label_vocab(
+    pairs: Sequence[Tuple[Graph, Graph]],
+) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Joint (vertex, edge) label vocabularies across a set of pairs.
+
+    Sharing one vocabulary across several ``pack_pairs`` calls keeps the
+    static ``n_vlabels`` / ``n_elabels`` arguments of the jitted engine
+    identical between batches, so bucketed workloads reuse compilations.
+    """
+    vset = sorted(
+        {int(a) for q, g in pairs for a in q.vlabels if a != BOTTOM}
+        | {int(a) for q, g in pairs for a in g.vlabels if a != BOTTOM}
+    )
+    eset = sorted(
+        {int(a) for q, g in pairs for a in np.unique(q.adj) if a != 0}
+        | {int(a) for q, g in pairs for a in np.unique(g.adj) if a != 0}
+    )
+    return tuple(vset), tuple(eset)
+
+
 def pack_pairs(
     pairs: Sequence[Tuple[Graph, Graph]],
     slots: int | None = None,
+    vocab: Tuple[Sequence[int], Sequence[int]] | None = None,
 ) -> GraphPairTensors:
-    """Pad, relabel and stack a list of (q, g) pairs into batch tensors."""
+    """Pad, relabel and stack a list of (q, g) pairs into batch tensors.
+
+    ``vocab`` — optional ``(vertex_labels, edge_labels)`` from
+    :func:`label_vocab`; when given it must cover every label in the batch
+    and is used verbatim so batches packed with the same vocab share the
+    compact label space (and hence jit compilations).
+    """
     padded: List[Tuple[Graph, Graph]] = []
     for q, g in pairs:
         qp, gp, _ = pad_pair(q, g)
         padded.append((qp, gp))
 
-    # Joint compact label maps across the batch.
-    vset = sorted(
-        {int(a) for qp, gp in padded for a in qp.vlabels if a != BOTTOM}
-        | {int(a) for qp, gp in padded for a in gp.vlabels if a != BOTTOM}
-    )
-    eset = sorted(
-        {int(a) for qp, gp in padded for a in np.unique(qp.adj) if a != 0}
-        | {int(a) for qp, gp in padded for a in np.unique(gp.adj) if a != 0}
-    )
+    # Joint compact label maps across the batch (or the caller's vocab).
+    if vocab is not None:
+        vset, eset = sorted(int(a) for a in vocab[0]), sorted(int(a) for a in vocab[1])
+        observed_v, observed_e = label_vocab(padded)
+        missing = (set(observed_v) - set(vset)) | (set(observed_e) - set(eset))
+        if missing:
+            raise ValueError(f"vocab does not cover batch labels: {sorted(missing)}")
+    else:
+        vset, eset = (list(s) for s in label_vocab(padded))
     vmap = {a: i for i, a in enumerate(vset)}
     emap = {a: i + 1 for i, a in enumerate(eset)}
     emap[0] = 0

@@ -1,0 +1,30 @@
+"""``repro.ged`` — the public GED API.
+
+One facade (:class:`GedEngine` / :func:`compute` / :func:`verify`) over
+pluggable backends (``exact`` host solver, ``jax`` vmap engine, ``pallas``
+kernel engine, ``auto`` escalation pipeline), with bucketed planning for
+mixed-size workloads and a single :class:`GedOutcome` result schema.
+
+The layers underneath (``repro.core.exact``, ``repro.core.engine``,
+``repro.serving``) remain importable, but new code — and all future
+sharding/caching work — should come through this door.
+"""
+
+from repro.ged.api import GedEngine, compute, verify
+from repro.ged.backends import (available_backends, make_backend,
+                                register_backend)
+from repro.ged.plan import as_graph, build_plan, slot_bucket
+from repro.ged.results import GedOutcome
+
+__all__ = [
+    "GedEngine",
+    "GedOutcome",
+    "compute",
+    "verify",
+    "register_backend",
+    "available_backends",
+    "make_backend",
+    "as_graph",
+    "build_plan",
+    "slot_bucket",
+]

@@ -1,0 +1,185 @@
+"""The one front door for GED: ``repro.ged.GedEngine``.
+
+    from repro import ged
+
+    outcomes = ged.compute([(q, g), ...])                 # module-level
+    engine = ged.GedEngine(backend="jax", pool=512)
+    outcomes = engine.verify(pairs, tau=4.0)              # batch
+    engine.submit(q, g); engine.submit(q2, g2, tau=3.0)
+    outcomes = engine.flush()                             # streaming
+
+Inputs are anything :func:`repro.ged.plan.as_graph` understands (``Graph``
+objects, ``(vlabels, edges)`` tuples, adjacency dicts); every entry point
+returns :class:`repro.ged.results.GedOutcome` per pair, whichever backend
+ran.  Mixed-size workloads are bucketed to power-of-two shapes so the
+jitted engine compiles once per bucket, not once per odd batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.engine.search import EngineConfig
+from repro.ged.backends import Backend, make_backend
+from repro.ged.plan import Vocab, build_plan
+from repro.ged.results import GedOutcome
+
+Taus = Union[float, Sequence[float]]
+
+_CONFIG_FIELDS = {f.name for f in dataclasses.fields(EngineConfig)}
+
+
+class GedEngine:
+    """Facade over the pluggable GED backends.
+
+    Parameters
+    ----------
+    backend : ``"auto"`` (default) | ``"exact"`` | ``"jax"`` | ``"pallas"``
+        or any name registered via :func:`repro.ged.register_backend`.
+    slots : pin every batch to this slot count instead of per-pair
+        power-of-two bucketing (bucketing is the default).
+    vocab : optional ``(vertex_labels, edge_labels)`` universe.  Pin it when
+        issuing many calls over the same label alphabet so the engine's
+        static shapes — and hence its compilations — are stable across
+        calls.
+    batch_size : scheduler batch size (``auto`` backend only).
+    Remaining keyword arguments (``pool``, ``expand``, ``max_iters``,
+    ``sweeps``, ``bound``, ``strategy``, ``use_kernel``) override
+    :class:`EngineConfig` defaults.  ``use_kernel`` is implied by the
+    ``"jax"`` (False) and ``"pallas"`` (True) backend names — passing a
+    contradicting value there raises.
+    """
+
+    def __init__(self, backend: str = "auto", *,
+                 slots: Optional[int] = None,
+                 vocab: Optional[Vocab] = None,
+                 batch_size: int = 256,
+                 config: Optional[EngineConfig] = None,
+                 **config_overrides):
+        unknown = set(config_overrides) - _CONFIG_FIELDS
+        if unknown:
+            raise TypeError(f"unknown GedEngine options: {sorted(unknown)}")
+        if config is None:
+            config = EngineConfig(**{"use_kernel": False, **config_overrides})
+        elif config_overrides:
+            config = dataclasses.replace(config, **config_overrides)
+        self.slots = slots
+        self.vocab = vocab
+        self._backend: Backend = make_backend(backend, batch_size=batch_size)
+        self.backend = self._backend.name
+        # "jax" means pure-jnp and "pallas" means kernels; default the flag
+        # from the backend name and refuse a contradicting user setting.
+        self._kernel_default = getattr(self._backend, "kernel_default", None)
+        if self._kernel_default is not None:
+            asked = config_overrides.get("use_kernel")
+            if asked is not None and asked != self._kernel_default:
+                raise ValueError(
+                    f"backend {backend!r} implies use_kernel="
+                    f"{self._kernel_default}; use the "
+                    f"{'pallas' if asked else 'jax'!r} backend instead")
+            config = dataclasses.replace(config,
+                                         use_kernel=self._kernel_default)
+        self.config = config
+        self._pending: List[Tuple[object, object, Optional[float]]] = []
+
+    # ------------------------------------------------------------ batch
+
+    def compute(self, pairs, **config_overrides) -> List[GedOutcome]:
+        """Exact-with-certificate GED for every pair."""
+        return self._run(pairs, None, verification=False,
+                         overrides=config_overrides)
+
+    def verify(self, pairs, tau: Taus, **config_overrides) -> List[GedOutcome]:
+        """Certified ``delta(q, g) <= tau``? for every pair.
+
+        ``tau`` is a scalar (broadcast) or one threshold per pair.
+        """
+        return self._run(pairs, tau, verification=True,
+                         overrides=config_overrides)
+
+    # -------------------------------------------------------- streaming
+
+    def submit(self, q, g, tau: Optional[float] = None) -> int:
+        """Enqueue one pair (verification when ``tau`` is given, otherwise
+        computation); returns its ticket — the index into ``flush()``'s
+        result list."""
+        self._pending.append((q, g, None if tau is None else float(tau)))
+        return len(self._pending) - 1
+
+    def flush(self) -> List[GedOutcome]:
+        """Answer every submitted pair, in submission order."""
+        pending, self._pending = self._pending, []
+        if not pending:
+            return []
+        results: List[Optional[GedOutcome]] = [None] * len(pending)
+        comp = [i for i, (_, _, tau) in enumerate(pending) if tau is None]
+        veri = [i for i, (_, _, tau) in enumerate(pending) if tau is not None]
+        if comp:
+            outs = self.compute([(pending[i][0], pending[i][1])
+                                 for i in comp])
+            for i, o in zip(comp, outs):
+                results[i] = o
+        if veri:
+            outs = self.verify([(pending[i][0], pending[i][1])
+                                for i in veri],
+                               [pending[i][2] for i in veri])
+            for i, o in zip(veri, outs):
+                results[i] = o
+        return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------ stats
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        """Backend counters plus compile-cache hit/miss totals."""
+        out: Dict[str, float] = dict(getattr(self._backend, "stats", {}))
+        cache = getattr(self._backend, "cache", None)
+        if cache is not None:
+            out["compile_cache_hits"] = cache.stats.hits
+            out["compile_cache_misses"] = cache.stats.misses
+        return out
+
+    # --------------------------------------------------------- internal
+
+    def _run(self, pairs, tau: Optional[Taus], verification: bool,
+             overrides: dict) -> List[GedOutcome]:
+        unknown = set(overrides) - _CONFIG_FIELDS
+        if unknown:
+            raise TypeError(f"unknown engine options: {sorted(unknown)}")
+        asked = overrides.get("use_kernel")
+        if (asked is not None and self._kernel_default is not None
+                and asked != self._kernel_default):
+            raise ValueError(
+                f"backend {self.backend!r} implies use_kernel="
+                f"{self._kernel_default}")
+        cfg = dataclasses.replace(self.config, **overrides) \
+            if overrides else self.config
+        plan = build_plan(pairs, slots=self.slots, vocab=self.vocab)
+        n = len(plan.pairs)
+        if verification:
+            taus = np.broadcast_to(
+                np.asarray(tau, dtype=np.float32), (n,)).copy()
+        else:
+            taus = np.zeros((n,), dtype=np.float32)
+        return self._backend.run(plan, taus, verification, cfg)
+
+
+# ------------------------------------------------- module-level helpers
+
+def compute(pairs, backend: str = "auto", **options) -> List[GedOutcome]:
+    """One-shot :meth:`GedEngine.compute` with a throwaway engine.
+
+    Compiled executables persist in the process-wide jit cache, so repeated
+    module-level calls stay cheap; hold a :class:`GedEngine` to accumulate
+    stats or stream with ``submit``/``flush``.
+    """
+    return GedEngine(backend, **options).compute(pairs)
+
+
+def verify(pairs, tau: Taus, backend: str = "auto",
+           **options) -> List[GedOutcome]:
+    """One-shot :meth:`GedEngine.verify` with a throwaway engine."""
+    return GedEngine(backend, **options).verify(pairs, tau)

@@ -1,0 +1,303 @@
+"""Pluggable execution backends behind the ``repro.ged`` facade.
+
+Every backend implements one protocol — ``run(plan, taus, verification,
+cfg) -> List[GedOutcome]`` — over the bucketed :class:`repro.ged.plan.Plan`:
+
+* ``"exact"``  — the paper-faithful host solver (AStar+/DFS+ with BMa),
+  one pair at a time.  Always certified; produces mappings.
+* ``"jax"``    — the batched vmap engine, one jit call per shape bucket,
+  compile-cache aware.  Pure-jnp bound math (``use_kernel=False``).
+* ``"pallas"`` — same engine with the Pallas kernels enabled on the hot
+  path (interpret mode on CPU, real kernels on TPU).
+* ``"auto"``   — the production pipeline: difficulty prediction, LPT
+  batch packing, escalation through growing engine rungs, host-solver
+  final rung.  Every answer it returns is certified.
+
+New backends (sharded, async, remote, ...) register with
+:func:`register_backend` and become constructible via
+``GedEngine(backend="name")`` with no facade changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Protocol, Sequence
+
+import numpy as np
+
+from repro.core.engine import api as engine_api
+from repro.core.engine.search import EngineConfig
+from repro.core.exact.search import ged as exact_ged
+from repro.core.exact.search import ged_verify
+from repro.ged.plan import (Bucket, CompileCache, Plan, pack_bucket,
+                            pad_tail, slot_bucket)
+from repro.ged.results import GedOutcome, engine_mapping
+from repro.runtime.scheduler import GedScheduler, difficulty
+
+
+class Backend(Protocol):
+    """What the facade requires of an execution backend."""
+
+    name: str
+    # What ``EngineConfig.use_kernel`` must be for this backend; ``None``
+    # means the backend honors whatever the config says.  ``GedEngine``
+    # applies the default and rejects contradicting user settings.
+    kernel_default: Optional[bool]
+
+    def run(self, plan: Plan, taus: np.ndarray, verification: bool,
+            cfg: EngineConfig) -> List[GedOutcome]:
+        """Answer every pair in ``plan`` (in order).  ``taus`` is aligned
+        with ``plan.pairs`` (zeros in computation mode)."""
+        ...
+
+
+# ----------------------------------------------------------- host solver
+
+class ExactBackend:
+    """Paper-faithful host solver: always certified, yields mappings."""
+
+    name = "exact"
+    kernel_default = None  # host solver: kernels irrelevant
+
+    def run(self, plan: Plan, taus: np.ndarray, verification: bool,
+            cfg: EngineConfig) -> List[GedOutcome]:
+        outcomes: List[GedOutcome] = []
+        for i, (q, g) in enumerate(plan.pairs):
+            t0 = time.perf_counter()
+            if verification:
+                res = ged_verify(q, g, float(taus[i]), bound="BMa",
+                                 strategy=cfg.strategy)
+                outcomes.append(_host_verify_outcome(
+                    res, float(taus[i]), self.name,
+                    time.perf_counter() - t0))
+            else:
+                res = exact_ged(q, g, bound="BMa", strategy=cfg.strategy)
+                outcomes.append(_host_compute_outcome(
+                    res, self.name, time.perf_counter() - t0))
+        return outcomes
+
+
+def _host_compute_outcome(res, backend: str, wall_s: float,
+                          rung: int = 0) -> GedOutcome:
+    ged = float(res.ged)
+    return GedOutcome(ged=ged, similar=None, certified=True,
+                      lower_bound=ged, upper_bound=ged,
+                      mapping=res.best_mapping, backend=backend,
+                      wall_s=wall_s, stats={"rung": rung,
+                                            "expanded": res.stats.expanded})
+
+
+def _host_verify_outcome(res, tau: float, backend: str, wall_s: float,
+                         rung: int = 0) -> GedOutcome:
+    similar = bool(res.similar)
+    return GedOutcome(
+        ged=None, similar=similar, certified=True,
+        lower_bound=0.0 if similar else float(np.nextafter(tau, np.inf)),
+        upper_bound=float(res.upper_bound) if similar else float("inf"),
+        mapping=res.best_mapping if similar else None,
+        backend=backend, wall_s=wall_s, tau=tau,
+        stats={"rung": rung, "expanded": res.stats.expanded})
+
+
+# --------------------------------------------------------- batched engine
+
+class EngineBackend:
+    """Batched vmap engine, one jit call per shape bucket.
+
+    ``cfg.use_kernel`` is taken as-is — ``GedEngine`` defaults it per
+    backend name (``jax`` -> False, ``pallas`` -> True) and rejects
+    contradictions, so the flag always matches what the user asked for.
+    """
+
+    name = "jax"
+    kernel_default = False
+
+    def __init__(self) -> None:
+        self.cache = CompileCache()
+
+    def run(self, plan: Plan, taus: np.ndarray, verification: bool,
+            cfg: EngineConfig) -> List[GedOutcome]:
+        results: List[Optional[GedOutcome]] = [None] * len(plan.pairs)
+        for bucket in plan.buckets:
+            t0 = time.perf_counter()
+            out = run_bucket(bucket.packed, bucket.pad_values(taus), cfg,
+                             verification, self.cache)
+            wall = time.perf_counter() - t0
+            for bi, gi in enumerate(bucket.indices):
+                results[gi] = _engine_outcome(
+                    out, bucket.packed, bi, verification,
+                    float(taus[gi]) if verification else None,
+                    self.name, wall, rung=0)
+        return results  # type: ignore[return-value]
+
+
+class PallasBackend(EngineBackend):
+    """Engine backend with Pallas kernels on the hot path."""
+
+    name = "pallas"
+    kernel_default = True
+
+
+def run_bucket(packed, taus: np.ndarray, cfg: EngineConfig,
+               verification: bool,
+               cache: Optional[CompileCache] = None) -> Dict[str, np.ndarray]:
+    """One engine invocation over a packed bucket; numpy result dict."""
+    import jax.numpy as jnp
+
+    if cache is not None:
+        cache.record(packed, cfg, verification)
+    args = engine_api.pair_tuple(packed)
+    out = engine_api._run_batch(
+        *args, jnp.asarray(np.asarray(taus, dtype=np.float32)), cfg,
+        bool(verification), packed.n_vlabels, packed.n_elabels)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def _engine_outcome(out: Dict[str, np.ndarray], packed, bi: int,
+                    verification: bool, tau: Optional[float], backend: str,
+                    wall_s: float, rung: int) -> GedOutcome:
+    certified = bool(out["exact"][bi])
+    n = int(packed.n[bi])
+    mapping = engine_mapping(packed.order[bi], out["best_img"][bi], n)
+    stats = {"rung": rung,
+             "iterations": float(out["iterations"][bi]),
+             "expanded": float(out["expanded"][bi])}
+    lb = float(out["lower_bound"][bi])
+    if verification:
+        similar = bool(out["similar"][bi])
+        ub = float(out["upper_bound"][bi])
+        return GedOutcome(
+            ged=None, similar=similar, certified=certified,
+            lower_bound=lb, upper_bound=ub if similar else float("inf"),
+            mapping=mapping if similar else None,
+            backend=backend, wall_s=wall_s, tau=tau, stats=stats)
+    raw = float(out["ged"][bi])
+    ged = float(np.rint(raw)) if certified else raw
+    return GedOutcome(
+        ged=ged, similar=None, certified=certified,
+        lower_bound=min(lb, ged), upper_bound=ged,
+        mapping=mapping, backend=backend, wall_s=wall_s, stats=stats)
+
+
+# ------------------------------------------------------------ escalation
+
+class AutoBackend:
+    """Difficulty-scheduled escalation: engine rungs, then the host solver.
+
+    This is the serving pipeline (previously private to
+    ``GedVerificationService``): predict per-pair difficulty, LPT-pack
+    equalised batches, run the batched engine, and re-queue uncertified
+    pairs through bigger-pool rungs down to the exact host solver — so
+    every answer is certified.
+    """
+
+    name = "auto"
+    kernel_default = None  # honors cfg.use_kernel on the engine rungs
+
+    def __init__(self, batch_size: int = 256):
+        self.scheduler = GedScheduler(batch_size)
+        self.cache = CompileCache()
+        self.stats: Dict[str, float] = {"pairs": 0, "escalated": 0,
+                                        "host_solved": 0, "batches": 0}
+
+    def run(self, plan: Plan, taus: np.ndarray, verification: bool,
+            cfg: EngineConfig) -> List[GedOutcome]:
+        t0 = time.time()
+        results: List[Optional[GedOutcome]] = [None] * len(plan.pairs)
+        diffs = [difficulty(q.n, g.n, q.m, g.m, q.vlabels, g.vlabels,
+                            tau=float(taus[i]) if verification else None)
+                 for i, (q, g) in enumerate(plan.pairs)]
+        queue = self.scheduler.pack(diffs, rung=0)
+        self.stats["pairs"] += len(plan.pairs)
+
+        while queue:
+            batch = queue.pop(0)
+            self.stats["batches"] += 1
+            params = self.scheduler.engine_params(batch.rung)
+            if params is None:
+                # final rung: exact host solver (paper-faithful AStar+-BMa)
+                for gi in batch.indices:
+                    q, g = plan.pairs[gi]
+                    self.stats["host_solved"] += 1
+                    wall = time.time() - t0
+                    if verification:
+                        res = ged_verify(q, g, float(taus[gi]), bound="BMa",
+                                         strategy=cfg.strategy)
+                        results[gi] = _host_verify_outcome(
+                            res, float(taus[gi]), f"{self.name}/exact",
+                            wall, rung=-1)
+                    else:
+                        res = exact_ged(q, g, bound="BMa",
+                                        strategy=cfg.strategy)
+                        results[gi] = _host_compute_outcome(
+                            res, f"{self.name}/exact", wall, rung=-1)
+                continue
+
+            pool, expand, max_iters = params
+            rcfg = dataclasses.replace(cfg, pool=pool, expand=expand,
+                                       max_iters=max_iters)
+            sub = [plan.pairs[gi] for gi in batch.indices]
+            slots = plan.fixed_slots or slot_bucket(
+                max(max(q.n, g.n) for q, g in sub))
+            packed, _ = pack_bucket(sub, slots, plan.vocab)
+            sub_taus = pad_tail(
+                np.asarray([taus[gi] for gi in batch.indices],
+                           dtype=np.float32), packed.batch)
+            out = run_bucket(packed, sub_taus, rcfg, verification, self.cache)
+            wall = time.time() - t0
+
+            uncertified = []
+            for bi, gi in enumerate(batch.indices):
+                if bool(out["exact"][bi]):
+                    results[gi] = _engine_outcome(
+                        out, packed, bi, verification,
+                        float(taus[gi]) if verification else None,
+                        self.name, wall, rung=batch.rung)
+                else:
+                    uncertified.append(bi)
+            if uncertified:
+                self.stats["escalated"] += len(uncertified)
+                nxt = self.scheduler.escalate(batch, uncertified)
+                if nxt is not None:
+                    queue.append(nxt)
+        return results  # type: ignore[return-value]
+
+
+# -------------------------------------------------------------- registry
+
+_REGISTRY: Dict[str, Callable[..., Backend]] = {}
+
+
+def register_backend(name: str, factory: Callable[..., Backend]) -> None:
+    """Make ``GedEngine(backend=name)`` constructible.
+
+    ``factory`` is called with keyword options the backend understands
+    (unknown ones are not passed — see :func:`make_backend`).
+    """
+    _REGISTRY[name] = factory
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_backend(name: str, **options) -> Backend:
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+    import inspect
+    params = inspect.signature(factory).parameters
+    if not any(p.kind is inspect.Parameter.VAR_KEYWORD
+               for p in params.values()):
+        options = {k: v for k, v in options.items() if k in params}
+    return factory(**options)
+
+
+register_backend("exact", ExactBackend)
+register_backend("jax", EngineBackend)
+register_backend("pallas", PallasBackend)
+register_backend("auto", AutoBackend)

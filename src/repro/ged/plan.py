@@ -1,0 +1,198 @@
+"""Workload planning for the ``repro.ged`` facade.
+
+Three jobs, all shape-related:
+
+1. **Ingestion** — :func:`as_graph` accepts the formats users actually have
+   (``Graph`` objects, ``(vlabels, edges)`` tuples, adjacency dicts) so the
+   facade never forces a manual conversion step.
+2. **Bucketing** — :func:`build_plan` groups pairs by power-of-two slot
+   count and pads each bucket's batch dimension to a power of two.  A
+   mixed-size workload therefore presents the jitted engine with a handful
+   of canonical shapes instead of one shape per odd batch, and every bucket
+   shares one label vocabulary so the static ``n_vlabels``/``n_elabels``
+   arguments match across buckets.
+3. **Compile-cache bookkeeping** — the executables live in ``jax.jit``'s
+   cache; :class:`CompileCache` mirrors the key set so callers can observe
+   hits vs misses (``GedEngine(...).stats``) and tests can assert reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine.search import EngineConfig
+from repro.core.engine.tensor_graphs import (GraphPairTensors, label_vocab,
+                                             pack_pairs)
+from repro.core.exact.graph import Graph
+
+MIN_SLOTS = 4
+
+Vocab = Tuple[Tuple[int, ...], Tuple[int, ...]]
+
+
+# ------------------------------------------------------------- ingestion
+
+def as_graph(obj) -> Graph:
+    """Coerce a user-facing graph description into a :class:`Graph`.
+
+    Accepted forms:
+
+    * ``Graph`` — returned as-is;
+    * ``(vlabels, edges)`` tuple/list with ``edges`` of ``(i, j, elabel)``;
+    * ``{"vlabels": [...], "edges": [...]}`` or ``{"vlabels": [...],
+      "adj": matrix}`` dicts;
+    * adjacency dict ``{node: (vlabel, [(neighbor, elabel), ...])}`` with
+      arbitrary hashable node ids (indexed in sorted order).
+    """
+    if isinstance(obj, Graph):
+        return obj
+    if isinstance(obj, dict):
+        if "vlabels" in obj:
+            if "adj" in obj:
+                return Graph(np.asarray(obj["vlabels"]), np.asarray(obj["adj"]))
+            return Graph.from_edges(list(obj["vlabels"]),
+                                    list(obj.get("edges", ())))
+        nodes = sorted(obj)
+        index = {v: i for i, v in enumerate(nodes)}
+        vlabels = [int(obj[v][0]) for v in nodes]
+        edges, seen = [], set()
+        for v in nodes:
+            for nbr, lab in obj[v][1]:
+                i, j = index[v], index[nbr]
+                key = (min(i, j), max(i, j))
+                if i == j or key in seen:
+                    continue
+                seen.add(key)
+                edges.append((i, j, int(lab)))
+        return Graph.from_edges(vlabels, edges)
+    if isinstance(obj, (tuple, list)) and len(obj) == 2:
+        vlabels, edges = obj
+        return Graph.from_edges(list(vlabels), list(edges))
+    raise TypeError(
+        f"cannot interpret {type(obj).__name__} as a graph; expected Graph, "
+        "(vlabels, edges), or an adjacency dict")
+
+
+def as_pairs(pairs) -> List[Tuple[Graph, Graph]]:
+    out = []
+    for p in pairs:
+        q, g = p
+        out.append((as_graph(q), as_graph(g)))
+    return out
+
+
+# -------------------------------------------------------------- bucketing
+
+def _pow2(n: int) -> int:
+    return max(1, 1 << (int(n) - 1).bit_length())
+
+
+def slot_bucket(n: int, min_slots: int = MIN_SLOTS) -> int:
+    """Power-of-two slot count for a padded pair of ``n`` vertices."""
+    return max(min_slots, _pow2(max(n, 1)))
+
+
+def pad_tail(values: np.ndarray, batch: int) -> np.ndarray:
+    """Pad a per-pair value array to ``batch`` by repeating the last entry —
+    the same rule :func:`pack_bucket` uses for the pairs themselves."""
+    arr = np.asarray(values)
+    return np.concatenate([arr, np.repeat(arr[-1:], batch - arr.shape[0],
+                                          axis=0)])
+
+
+def pack_bucket(
+    pairs: Sequence[Tuple[Graph, Graph]],
+    slots: int,
+    vocab: Optional[Vocab],
+) -> Tuple[GraphPairTensors, int]:
+    """Pack ``pairs`` at ``slots``, padding the batch dim to a power of two
+    (the filler repeats the last pair).  Returns ``(tensors, real_count)``."""
+    real = len(pairs)
+    padded = list(pairs) + [pairs[-1]] * (_pow2(real) - real)
+    return pack_pairs(padded, slots=slots, vocab=vocab), real
+
+
+@dataclasses.dataclass
+class Bucket:
+    slots: int
+    indices: List[int]          # positions in the plan's pair list
+    packed: GraphPairTensors    # batch padded to a power of two
+    real: int                   # pairs before batch padding
+
+    def pad_values(self, values: np.ndarray) -> np.ndarray:
+        """Gather per-pair values for this bucket, padded like the batch."""
+        return pad_tail(np.asarray(values)[self.indices], self.packed.batch)
+
+
+@dataclasses.dataclass
+class Plan:
+    pairs: List[Tuple[Graph, Graph]]
+    buckets: List[Bucket]
+    vocab: Vocab
+    fixed_slots: Optional[int]  # user-pinned slot count (disables bucketing)
+
+
+def build_plan(
+    raw_pairs,
+    slots: Optional[int] = None,
+    vocab: Optional[Vocab] = None,
+) -> Plan:
+    """Ingest ``raw_pairs`` and group them into canonical-shape buckets."""
+    pairs = as_pairs(raw_pairs)
+    if vocab is None:
+        vocab = label_vocab(pairs)
+    else:
+        vocab = tuple(sorted(int(a) for a in vocab[0])), \
+            tuple(sorted(int(a) for a in vocab[1]))
+    by_slots: Dict[int, List[int]] = {}
+    for i, (q, g) in enumerate(pairs):
+        s = slots if slots is not None else slot_bucket(max(q.n, g.n))
+        by_slots.setdefault(s, []).append(i)
+    buckets = []
+    for s in sorted(by_slots):
+        idxs = by_slots[s]
+        packed, real = pack_bucket([pairs[i] for i in idxs], s, vocab)
+        buckets.append(Bucket(s, idxs, packed, real))
+    return Plan(pairs, buckets, vocab, slots)
+
+
+# ---------------------------------------------------------- compile cache
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+
+class CompileCache:
+    """Mirror of the jit cache keys the facade has exercised.
+
+    ``jax.jit`` owns the compiled executables; this class only tracks which
+    ``(batch_shape, vocab_sizes, config, mode)`` keys have been seen, so
+    engine stats can report compile reuse and tests can assert that
+    same-bucket batches do not re-trace.
+    """
+
+    def __init__(self) -> None:
+        self._keys: set = set()
+        self.stats = CacheStats()
+
+    @staticmethod
+    def key(packed: GraphPairTensors, cfg: EngineConfig,
+            verification: bool) -> tuple:
+        return (packed.qv.shape, packed.n_vlabels, packed.n_elabels,
+                cfg, bool(verification))
+
+    def record(self, packed: GraphPairTensors, cfg: EngineConfig,
+               verification: bool) -> bool:
+        """Note one engine invocation; returns True on a cache hit."""
+        k = self.key(packed, cfg, verification)
+        if k in self._keys:
+            self.stats.hits += 1
+            return True
+        self._keys.add(k)
+        self.stats.misses += 1
+        return False

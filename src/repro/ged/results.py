@@ -1,0 +1,71 @@
+"""The single result schema every ``repro.ged`` entry point returns.
+
+Whatever the backend — host solver, batched JAX engine, Pallas-kernel
+engine, or the escalating ``auto`` pipeline — a query for one pair comes
+back as one :class:`GedOutcome`.  Layers above (serving, benchmarks,
+examples) consume only this type.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class GedOutcome:
+    """Answer for one (q, g) pair.
+
+    * Computation mode fills ``ged`` and leaves ``similar`` ``None``;
+      verification mode fills ``similar`` (and ``tau``) and leaves ``ged``
+      ``None`` unless the exact distance happened to be established.
+    * ``certified`` — the answer carries an exactness certificate (always
+      true for the ``exact`` and ``auto`` backends; for ``jax``/``pallas``
+      it is the engine's pool-floor certificate).
+    * ``lower_bound <= delta(q, g) <= upper_bound`` always holds; for a
+      certified computation both equal ``ged``.  For a certified
+      verification *rejection* the true distance exceeds ``tau`` and
+      ``lower_bound`` records the engine's proven floor.
+    * ``mapping`` — image of padded-q vertex ``i`` in g (``-1`` = unset);
+      ``None`` when the backend produced no full mapping.
+    * ``backend`` — which registry entry produced the answer (the ``auto``
+      backend reports ``"auto"``, or ``"auto/exact"`` for pairs that
+      escalated all the way to the host solver).
+    * ``stats`` — backend-specific diagnostics (engine iterations/expanded
+      states, escalation rung, ...).  Informational only.
+    """
+
+    ged: Optional[float]
+    similar: Optional[bool]
+    certified: bool
+    lower_bound: float
+    upper_bound: float
+    mapping: Optional[np.ndarray]
+    backend: str
+    wall_s: float
+    tau: Optional[float] = None
+    stats: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def rung(self) -> int:
+        """Escalation rung that answered (``auto`` backend; -1 = host)."""
+        return int(self.stats.get("rung", 0))
+
+
+def engine_mapping(order_row: np.ndarray, img_row: np.ndarray,
+                   n: int) -> Optional[np.ndarray]:
+    """Convert the engine's by-order-position image to a by-vertex mapping.
+
+    ``img_row[pos]`` is the g-slot assigned to q vertex ``order_row[pos]``.
+    Returns the first ``n`` entries (the padded pair size) or ``None`` when
+    the engine produced no full mapping.
+    """
+    if n <= 0 or np.all(img_row[:n] < 0):
+        return None if n > 0 else np.zeros(0, dtype=np.int64)
+    out = np.full(order_row.shape[0], -1, dtype=np.int64)
+    for pos in range(n):
+        if img_row[pos] >= 0:
+            out[int(order_row[pos])] = int(img_row[pos])
+    return out[:n]

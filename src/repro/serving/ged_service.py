@@ -3,35 +3,27 @@ production server.
 
 Request: (q, g, tau) -> "is delta(q, g) <= tau?", certified.
 
-Pipeline per flush:
-  1. predict per-pair difficulty (``runtime.scheduler.difficulty``),
-  2. LPT-pack into equalised batches (straggler mitigation),
-  3. run the batched AStar+-hybrid engine (``core.engine.api.verify_batch``)
-     — data-parallel over every mesh axis at scale,
-  4. escalate pairs whose answer is not *certified* (pool overflow /
-     iteration cap) through bigger-pool rungs,
-  5. final rung: the exact host solver (``core.exact``) — the paper-faithful
-     AStar+-BMa — so every answer the service returns is exact.
-
-The same object serves GED *computation* via ``compute()`` (incumbent
-initialised to +inf instead of tau — identical engine, per the unified
-framework).
+The pipeline (difficulty prediction, LPT straggler packing, batched
+AStar+-hybrid engine, escalation through bigger-pool rungs, exact host
+solver as the final rung) lives in ``repro.ged.backends.AutoBackend``;
+this service is a thin request/response wrapper over
+``repro.ged.GedEngine(backend="auto")``.  Every answer it returns is
+certified exact, and every answer is a ``repro.ged.GedOutcome``.
+``GedResult`` aliases it for *readers* of the old result type (the
+``similar``/``ged``/``certified``/``rung``/``wall_s`` fields survive);
+code that *constructed* ``GedResult`` must switch to ``GedOutcome``'s
+richer signature.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
-import numpy as np
-
-from repro.core.engine.api import ged_batch, verify_batch
-from repro.core.engine.search import EngineConfig
-from repro.core.engine.tensor_graphs import pack_pairs
 from repro.core.exact.graph import Graph
-from repro.core.exact.search import ged as exact_ged, ged_verify
-from repro.runtime.scheduler import GedScheduler, difficulty
+from repro.ged import GedEngine, GedOutcome
+
+GedResult = GedOutcome  # read-compatible alias (see module docstring)
 
 
 @dataclasses.dataclass
@@ -41,115 +33,27 @@ class GedRequest:
     tau: float = 0.0
 
 
-@dataclasses.dataclass
-class GedResult:
-    similar: Optional[bool]      # verification answer (None for compute)
-    ged: Optional[float]         # exact GED when computed
-    certified: bool
-    rung: int                    # 0.. engine rungs, -1 = host solver
-    wall_s: float
-
-
 class GedVerificationService:
     def __init__(self, batch_size: int = 256, slots: int = 32,
                  strategy: str = "astar", bound: str = "hybrid",
                  use_kernel: bool = False):
-        self.scheduler = GedScheduler(batch_size)
-        self.slots = slots
-        self.strategy = strategy
-        self.bound = bound
-        self.use_kernel = use_kernel
-        self.stats: Dict[str, float] = {"pairs": 0, "escalated": 0,
-                                        "host_solved": 0, "batches": 0}
+        self.engine = GedEngine(
+            backend="auto", slots=slots, batch_size=batch_size,
+            strategy=strategy, bound=bound, use_kernel=use_kernel)
+        # exposed for tests/tuning: mutating ``scheduler.rungs`` reshapes
+        # the escalation ladder of the underlying auto backend.
+        self.scheduler = self.engine._backend.scheduler
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        return self.engine._backend.stats
 
     # ------------------------------------------------------------ public
 
-    def verify(self, requests: Sequence[GedRequest]) -> List[GedResult]:
-        return self._run(requests, verification=True)
+    def verify(self, requests: Sequence[GedRequest]) -> List[GedOutcome]:
+        return self.engine.verify([(r.q, r.g) for r in requests],
+                                  [r.tau for r in requests])
 
     def compute(self, pairs: Sequence[Tuple[Graph, Graph]]
-                ) -> List[GedResult]:
-        reqs = [GedRequest(q, g, 0.0) for q, g in pairs]
-        return self._run(reqs, verification=False)
-
-    # ---------------------------------------------------------- internal
-
-    def _difficulties(self, reqs: Sequence[GedRequest], verification: bool
-                      ) -> List[float]:
-        out = []
-        for r in reqs:
-            out.append(difficulty(
-                r.q.n, r.g.n, r.q.m, r.g.m, r.q.vlabels, r.g.vlabels,
-                tau=r.tau if verification else None))
-        return out
-
-    def _engine_cfg(self, rung: int) -> Optional[EngineConfig]:
-        params = self.scheduler.engine_params(rung)
-        if params is None:
-            return None
-        pool, expand, max_iters = params
-        return EngineConfig(pool=pool, expand=expand, max_iters=max_iters,
-                            bound=self.bound, strategy=self.strategy,
-                            use_kernel=self.use_kernel)
-
-    def _run(self, reqs: Sequence[GedRequest], verification: bool
-             ) -> List[GedResult]:
-        t0 = time.time()
-        results: List[Optional[GedResult]] = [None] * len(reqs)
-        diffs = self._difficulties(reqs, verification)
-        queue = self.scheduler.pack(diffs, rung=0)
-        self.stats["pairs"] += len(reqs)
-
-        while queue:
-            batch = queue.pop(0)
-            self.stats["batches"] += 1
-            cfg = self._engine_cfg(batch.rung)
-            if cfg is None:
-                # final rung: exact host solver (paper-faithful AStar+-BMa)
-                for gi in batch.indices:
-                    r = reqs[gi]
-                    self.stats["host_solved"] += 1
-                    if verification:
-                        res = ged_verify(r.q, r.g, r.tau, bound="BMa",
-                                         strategy=self.strategy)
-                        results[gi] = GedResult(
-                            similar=bool(res.similar), ged=None,
-                            certified=True, rung=-1,
-                            wall_s=time.time() - t0)
-                    else:
-                        res = exact_ged(r.q, r.g, bound="BMa",
-                                        strategy=self.strategy)
-                        results[gi] = GedResult(
-                            similar=None, ged=float(res.ged),
-                            certified=True, rung=-1,
-                            wall_s=time.time() - t0)
-                continue
-
-            pairs = [(reqs[gi].q, reqs[gi].g) for gi in batch.indices]
-            packed = pack_pairs(pairs, slots=self.slots)
-            if verification:
-                taus = [reqs[gi].tau for gi in batch.indices]
-                out = verify_batch(packed, taus, cfg)
-                certified = out["exact"]
-                answer = out["similar"]
-            else:
-                out = ged_batch(packed, cfg)
-                certified = out["exact"]
-                answer = out["ged"]
-
-            uncertified = []
-            for bi, gi in enumerate(batch.indices):
-                if bool(certified[bi]):
-                    results[gi] = GedResult(
-                        similar=bool(answer[bi]) if verification else None,
-                        ged=None if verification else float(answer[bi]),
-                        certified=True, rung=batch.rung,
-                        wall_s=time.time() - t0)
-                else:
-                    uncertified.append(bi)
-            if uncertified:
-                self.stats["escalated"] += len(uncertified)
-                nxt = self.scheduler.escalate(batch, uncertified)
-                if nxt is not None:
-                    queue.append(nxt)
-        return results  # type: ignore[return-value]
+                ) -> List[GedOutcome]:
+        return self.engine.compute(pairs)

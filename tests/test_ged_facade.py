@@ -1,0 +1,224 @@
+"""The ``repro.ged`` facade: backend parity, bucketed compile reuse,
+ingestion adapters, streaming, and the unified result schema."""
+
+import numpy as np
+import pytest
+
+from repro import ged
+from repro.core.engine.api import run_batch_traces
+from repro.core.exact.brute import brute_force_ged
+from repro.core.exact.graph import Graph
+from repro.data.graphs import perturb, random_graph
+
+
+def _small_pairs(seed, count, nmin=3, nmax=6):
+    rng = np.random.default_rng(seed)
+    pairs = []
+    for _ in range(count):
+        q = random_graph(rng, int(rng.integers(nmin, nmax + 1)),
+                         density=0.4, n_vlabels=3, n_elabels=2)
+        if rng.random() < 0.5:
+            g = perturb(rng, q, int(rng.integers(0, 4)),
+                        n_vlabels=3, n_elabels=2)
+        else:
+            g = random_graph(rng, int(rng.integers(nmin, nmax + 1)),
+                             density=0.4, n_vlabels=3, n_elabels=2)
+        pairs.append((q, g))
+    return pairs
+
+
+# ------------------------------------------------------------------ parity
+
+@pytest.mark.parametrize("backend", ["exact", "jax", "auto"])
+def test_backend_matches_brute_force_oracle(backend):
+    pairs = _small_pairs(0, 10)
+    truth = [brute_force_ged(q, g) for q, g in pairs]
+    outs = ged.GedEngine(backend, pool=1024, expand=4,
+                         max_iters=1024).compute(pairs)
+    for o, t in zip(outs, truth):
+        assert o.certified
+        assert o.ged == t, (backend, o, t)
+
+
+def test_exact_and_jax_backends_agree_everywhere():
+    pairs = _small_pairs(1, 12)
+    a = ged.GedEngine("exact").compute(pairs)
+    b = ged.GedEngine("jax", pool=1024, expand=4, max_iters=1024
+                      ).compute(pairs)
+    for oa, ob in zip(a, b):
+        assert ob.certified and oa.ged == ob.ged
+
+
+def test_verification_parity_across_backends():
+    pairs = _small_pairs(2, 8)
+    truth = [brute_force_ged(q, g) for q, g in pairs]
+    for delta in (-1, 0, 1):
+        taus = [max(t + delta, 0) for t in truth]
+        for backend in ("exact", "jax", "auto"):
+            outs = ged.GedEngine(backend, pool=1024, expand=4,
+                                 max_iters=1024).verify(pairs, taus)
+            for o, t, tau in zip(outs, truth, taus):
+                assert o.certified
+                assert o.similar == (t <= tau), (backend, delta, o, t)
+
+
+# ----------------------------------------------------------- result schema
+
+def test_outcome_schema_and_bounds():
+    pairs = _small_pairs(3, 6)
+    for backend in ("exact", "jax", "auto"):
+        for o in ged.GedEngine(backend, pool=1024).compute(pairs):
+            assert o.similar is None and o.ged is not None
+            assert o.lower_bound <= o.ged <= o.upper_bound
+            assert o.backend.startswith(backend.split("/")[0])
+            assert o.wall_s >= 0.0
+            if o.certified:
+                assert o.lower_bound == o.ged == o.upper_bound
+                # a certified computation carries a witness mapping whose
+                # image is a valid partial permutation
+                assert o.mapping is not None
+                img = o.mapping[o.mapping >= 0]
+                assert len(set(img.tolist())) == len(img)
+        for o in ged.GedEngine(backend, pool=1024).verify(pairs, 3.0):
+            assert o.ged is None and o.similar is not None
+            assert o.tau == 3.0
+
+
+def test_mapping_cost_matches_ged():
+    """The witness mapping is on the padded (q', g') pair and realises the
+    reported distance."""
+    from repro.core.exact.graph import editorial_cost, pad_pair
+    pairs = _small_pairs(4, 6)
+    for backend in ("exact", "jax"):
+        outs = ged.GedEngine(backend, pool=1024, expand=4).compute(pairs)
+        for (q, g), o in zip(pairs, outs):
+            if not o.certified or o.mapping is None:
+                continue
+            qp, gp, _ = pad_pair(q, g)
+            assert editorial_cost(qp, gp, o.mapping) == o.ged
+
+
+# -------------------------------------------------------------- ingestion
+
+def test_input_adapters_are_equivalent():
+    q = Graph.from_edges([0, 1, 1], [(0, 1, 1), (1, 2, 2)])
+    g = Graph.from_edges([0, 1, 2], [(0, 1, 1), (0, 2, 1)])
+    as_tuple = ([0, 1, 1], [(0, 1, 1), (1, 2, 2)])
+    as_dict = {"vlabels": [0, 1, 1], "edges": [(0, 1, 1), (1, 2, 2)]}
+    as_adjdict = {"a": (0, [("b", 1)]),
+                  "b": (1, [("a", 1), ("c", 2)]),
+                  "c": (1, [("b", 2)])}
+    want = ged.compute([(q, g)], backend="exact")[0].ged
+    for form in (as_tuple, as_dict, as_adjdict):
+        assert ged.compute([(form, g)], backend="exact")[0].ged == want
+
+
+def test_adapter_rejects_garbage():
+    with pytest.raises(TypeError):
+        ged.compute([(42, 43)], backend="exact")
+
+
+# -------------------------------------------------------------- streaming
+
+def test_submit_flush_preserves_order_and_modes():
+    pairs = _small_pairs(5, 5)
+    truth = [brute_force_ged(q, g) for q, g in pairs]
+    eng = ged.GedEngine("exact")
+    tickets = []
+    for i, (q, g) in enumerate(pairs):
+        tau = float(truth[i]) if i % 2 else None  # alternate verify/compute
+        tickets.append(eng.submit(q, g, tau=tau))
+    assert tickets == list(range(len(pairs)))
+    outs = eng.flush()
+    assert len(outs) == len(pairs)
+    for i, (o, t) in enumerate(zip(outs, truth)):
+        if i % 2:
+            assert o.similar is True and o.tau == t
+        else:
+            assert o.ged == t
+    assert eng.flush() == []  # drained
+
+
+# ------------------------------------------------- bucketing / compile cache
+
+VOCAB = ((0, 1, 2), (1, 2))
+
+
+def _sized_pairs(seed, sizes):
+    rng = np.random.default_rng(seed)
+    out = []
+    for n in sizes:
+        q = random_graph(rng, n, density=0.4, n_vlabels=3, n_elabels=2)
+        out.append((q, perturb(rng, q, 2, n_vlabels=3, n_elabels=2)))
+    return out
+
+
+def test_bucketing_reuses_compilations_across_batches():
+    """Mixed-size workloads must compile once per slot bucket, then reuse."""
+    eng = ged.GedEngine("jax", vocab=VOCAB, pool=128, expand=2, max_iters=64)
+    # sizes 3..4 -> 4-slot bucket, 5..8 -> 8-slot bucket; 4 pairs per bucket
+    batch1 = _sized_pairs(7, [3, 4, 5, 6, 4, 3, 7, 8])
+    t0 = run_batch_traces()
+    outs = eng.compute(batch1)
+    assert len(outs) == len(batch1)
+    new_traces = run_batch_traces() - t0
+    assert new_traces == 2, f"expected one trace per bucket, got {new_traces}"
+
+    # same buckets, different pairs and batch sizes (padded to pow2) -> no
+    # new traces at all
+    batch2 = _sized_pairs(8, [4, 5, 6, 3, 8, 5, 4])
+    t1 = run_batch_traces()
+    eng.compute(batch2)
+    assert run_batch_traces() - t1 == 0, "same-bucket batch re-traced"
+    assert eng.stats["compile_cache_hits"] >= 2
+
+
+def test_bucketing_results_match_unbucketed():
+    pairs = _sized_pairs(9, [3, 5, 8, 4, 6])
+    bucketed = ged.GedEngine("jax", pool=512, expand=4).compute(pairs)
+    pinned = ged.GedEngine("jax", slots=8, pool=512, expand=4).compute(pairs)
+    for a, b in zip(bucketed, pinned):
+        assert a.certified == b.certified
+        if a.certified:
+            assert a.ged == b.ged
+
+
+def test_slot_bucket_is_pow2_and_monotone():
+    assert [ged.slot_bucket(n) for n in (1, 3, 4, 5, 8, 9, 16, 17)] == \
+        [4, 4, 4, 8, 8, 16, 16, 32]
+
+
+# ------------------------------------------------------------- registry
+
+def test_backend_registry_round_trip():
+    assert set(ged.available_backends()) >= {"exact", "jax", "pallas",
+                                             "auto"}
+    with pytest.raises(ValueError):
+        ged.GedEngine("no-such-backend")
+
+    class EchoBackend:
+        name = "echo"
+
+        def run(self, plan, taus, verification, cfg):
+            from repro.ged.results import GedOutcome
+            return [GedOutcome(ged=0.0, similar=None, certified=False,
+                               lower_bound=0.0, upper_bound=0.0,
+                               mapping=None, backend=self.name, wall_s=0.0)
+                    for _ in plan.pairs]
+
+    ged.register_backend("echo", EchoBackend)
+    try:
+        outs = ged.GedEngine("echo").compute(_small_pairs(10, 2))
+        assert [o.backend for o in outs] == ["echo", "echo"]
+    finally:
+        from repro.ged import backends as B
+        B._REGISTRY.pop("echo", None)
+
+
+def test_module_level_one_shots():
+    pairs = _small_pairs(11, 3)
+    truth = [brute_force_ged(q, g) for q, g in pairs]
+    outs = ged.compute(pairs, backend="auto")
+    assert [o.ged for o in outs] == truth
+    vers = ged.verify(pairs, truth, backend="auto")
+    assert all(o.similar for o in vers)
