@@ -27,8 +27,11 @@ def _flat_pairs(gs, max_pairs=60):
 
 
 def _engine(**overrides) -> GedEngine:
+    # cache=False: benchmarks re-run identical pair sets to measure
+    # steady-state throughput — the result cache would answer the repeat
+    # from memory and time nothing.
     opts = dict(slots=16, pool=512, expand=8, max_iters=512,
-                bound="hybrid", strategy="astar")
+                bound="hybrid", strategy="astar", cache=False)
     opts.update(overrides)
     return GedEngine(opts.pop("backend", "jax"), **opts)
 
@@ -194,8 +197,47 @@ def kernel_validation(quick=True) -> List[Dict]:
     return rows
 
 
+def engine_backend_throughput(quick=True) -> List[Dict]:
+    """Single-device vs mesh-sharded executor throughput.
+
+    Emits ``results/bench/BENCH_engine.json`` — the perf-trajectory record
+    the ROADMAP's scaling work is judged against.  On one CPU device the
+    sharded path should roughly match ``jax`` (same compute + shard_map
+    overhead); the row captures the device count so multi-chip runs are
+    comparable.
+    """
+    import jax
+
+    gs = groups(quick, pairs_per_group=3)
+    pairs = _flat_pairs(gs)
+    rows = []
+    for backend in ("jax", "sharded"):
+        eng = _engine(backend=backend)
+        outs, dt_warm = timed(eng.compute, pairs)          # includes compile
+        outs, dt = timed(eng.compute, pairs)               # steady state
+        rows.append({
+            "backend": backend,
+            "devices": jax.device_count(),
+            "batch_multiple": int(eng.batch_multiple),
+            "pairs": len(pairs),
+            "pairs_per_s": len(pairs) / dt,
+            "compile_s": dt_warm - dt,
+            "certified_frac":
+                float(np.mean([o.certified for o in outs])),
+            "mean_wall_s": float(np.mean([o.wall_s for o in outs])),
+        })
+    a, b = (r["pairs_per_s"] for r in rows)
+    assert min(a, b) > 0
+    print_table("Engine backend throughput (single-device vs sharded)",
+                rows, ["backend", "devices", "batch_multiple", "pairs",
+                       "pairs_per_s", "compile_s", "certified_frac"])
+    record("BENCH_engine", rows)
+    return rows
+
+
 ALL = (engine_agreement_and_throughput, engine_verification,
-       engine_bound_ablation, engine_sweeps_ablation, kernel_validation)
+       engine_bound_ablation, engine_sweeps_ablation,
+       engine_backend_throughput, kernel_validation)
 
 
 def scheduler_cost_model(quick=True) -> List[Dict]:

@@ -53,6 +53,23 @@ print("  certified:", [o.certified for o in outs[:8]], "...")
 vers = engine.verify(pairs, tau=4.0)
 print("  <= 4?    :", [o.similar for o in vers[:8]], "...")
 
+# --- mesh-sharded execution: same policy, shard_map placement --------------
+# The sharded backend shards the pair batch over every local device
+# (or a mesh you pass via ``mesh=``); batches are padded to shard
+# multiples automatically, and outcomes are identical to the jax backend.
+import jax
+sharded = ged.GedEngine(backend="sharded", pool=512, expand=8)
+outs_sh = sharded.compute(pairs)
+assert [o.ged for o in outs_sh] == [o.ged for o in outs]
+print(f"\nsharded       : {len(pairs)} pairs over {jax.device_count()} "
+      f"device(s), batch multiple {sharded.batch_multiple}")
+
+# --- engine-level result cache: duplicates never re-execute ----------------
+again = sharded.compute(pairs)              # same pairs -> pure cache hits
+assert all(o.stats.get("cached") for o in again)
+print(f"result cache  : {sharded.stats['result_cache_hits']} hits, "
+      f"{sharded.stats['result_cache_misses']} misses")
+
 # --- streaming: mix computation and verification, flush once ---------------
 engine.submit(q, g)                  # computation ticket 0
 engine.submit(q, g, tau=4.0)         # verification ticket 1

@@ -8,8 +8,9 @@
     the unified ``GedOutcome`` result schema.
 
 Pairs are data-parallel: ``vmap`` on one device; ``shard_map`` over the mesh
-(``pod`` x ``data`` x ``model`` all carry pairs) at scale — see
-``repro/serving/ged_service.py`` and ``launch/dryrun.py``.
+(``pod`` x ``data`` x ``model`` all carry pairs) at scale — the placement
+layer lives in :mod:`repro.ged.exec` (``Executor`` / ``ShardedExecutor``);
+see also ``repro/serving/ged_service.py`` and ``launch/dryrun.py``.
 """
 
 from __future__ import annotations
@@ -58,6 +59,20 @@ def _run_batch(qv, gv, qa, ga, order, n, taus, cfg: EngineConfig,
                         cfg, tau, verification)
 
     return jax.vmap(one)(qv, gv, qa, ga, order, n, taus)
+
+
+def run_packed(packed: GraphPairTensors, taus, cfg: EngineConfig,
+               verification: bool) -> Dict[str, np.ndarray]:
+    """One engine invocation over a packed batch; numpy result dict.
+
+    The raw compute step under :mod:`repro.ged.exec` — no deprecation
+    shimming, no rounding policy, just pack-in / arrays-out.
+    """
+    args = pair_tuple(packed)
+    out = _run_batch(*args, jnp.asarray(np.asarray(taus, dtype=np.float32)),
+                     cfg, bool(verification), packed.n_vlabels,
+                     packed.n_elabels)
+    return {k: np.asarray(v) for k, v in out.items()}
 
 
 def ged_batch(pairs: GraphPairTensors, cfg: EngineConfig = EngineConfig()

@@ -1,18 +1,26 @@
 """``repro.ged`` — the public GED API.
 
 One facade (:class:`GedEngine` / :func:`compute` / :func:`verify`) over
-pluggable backends (``exact`` host solver, ``jax`` vmap engine, ``pallas``
-kernel engine, ``auto`` escalation pipeline), with bucketed planning for
-mixed-size workloads and a single :class:`GedOutcome` result schema.
+pluggable policy backends (``exact`` host solver, ``jax`` vmap engine,
+``pallas`` kernel engine, ``sharded`` mesh-parallel engine, ``auto``
+escalation pipeline), with bucketed planning for mixed-size workloads and
+a single :class:`GedOutcome` result schema.
+
+Policies ride on the executor layer (:mod:`repro.ged.exec`): an
+:class:`Executor` owns device placement, compile caching, packing and
+unpacking; :class:`ShardedExecutor` ``shard_map``-s the search over the
+device mesh; and an engine-level :class:`ResultCache` answers duplicate
+pairs without re-execution.
 
 The layers underneath (``repro.core.exact``, ``repro.core.engine``,
 ``repro.serving``) remain importable, but new code — and all future
-sharding/caching work — should come through this door.
+sharding/caching/async work — should come through this door.
 """
 
 from repro.ged.api import GedEngine, compute, verify
 from repro.ged.backends import (available_backends, make_backend,
                                 register_backend)
+from repro.ged.exec import Executor, ResultCache, ShardedExecutor
 from repro.ged.plan import as_graph, build_plan, slot_bucket
 from repro.ged.results import GedOutcome
 
@@ -27,4 +35,7 @@ __all__ = [
     "as_graph",
     "build_plan",
     "slot_bucket",
+    "Executor",
+    "ShardedExecutor",
+    "ResultCache",
 ]

@@ -13,6 +13,13 @@ objects, ``(vlabels, edges)`` tuples, adjacency dicts); every entry point
 returns :class:`repro.ged.results.GedOutcome` per pair, whichever backend
 ran.  Mixed-size workloads are bucketed to power-of-two shapes so the
 jitted engine compiles once per bucket, not once per odd batch.
+
+In front of every backend sits an engine-level result cache
+(:class:`repro.ged.exec.ResultCache`): queries are keyed on canonical pair
+digests (label-vocab-independent; tau-aware for verification), so
+duplicate pairs — within one batch or across calls — are answered without
+re-planning, re-compiling, or re-executing.  ``GedEngine(cache=False)``
+opts out (benchmarks do, to time real work).
 """
 
 from __future__ import annotations
@@ -24,7 +31,8 @@ import numpy as np
 
 from repro.core.engine.search import EngineConfig
 from repro.ged.backends import Backend, make_backend
-from repro.ged.plan import Vocab, build_plan
+from repro.ged.exec import ResultCache, detached, pair_key
+from repro.ged.plan import Vocab, as_pairs, build_plan
 from repro.ged.results import GedOutcome
 
 Taus = Union[float, Sequence[float]]
@@ -38,7 +46,8 @@ class GedEngine:
     Parameters
     ----------
     backend : ``"auto"`` (default) | ``"exact"`` | ``"jax"`` | ``"pallas"``
-        or any name registered via :func:`repro.ged.register_backend`.
+        | ``"sharded"`` or any name registered via
+        :func:`repro.ged.register_backend`.
     slots : pin every batch to this slot count instead of per-pair
         power-of-two bucketing (bucketing is the default).
     vocab : optional ``(vertex_labels, edge_labels)`` universe.  Pin it when
@@ -46,17 +55,25 @@ class GedEngine:
         static shapes — and hence its compilations — are stable across
         calls.
     batch_size : scheduler batch size (``auto`` backend only).
+    mesh : device mesh for the ``"sharded"`` backend (default: a 1-D mesh
+        over every local device).  Ignored by single-device backends.
+    cache : keep an engine-level result cache (default True): duplicate
+        pairs — within one batch or across calls — are answered from the
+        cache instead of re-executing.  ``cache_size`` bounds it (LRU).
     Remaining keyword arguments (``pool``, ``expand``, ``max_iters``,
     ``sweeps``, ``bound``, ``strategy``, ``use_kernel``) override
     :class:`EngineConfig` defaults.  ``use_kernel`` is implied by the
-    ``"jax"`` (False) and ``"pallas"`` (True) backend names — passing a
-    contradicting value there raises.
+    ``"jax"``/``"sharded"`` (False) and ``"pallas"`` (True) backend names —
+    passing a contradicting value there raises.
     """
 
     def __init__(self, backend: str = "auto", *,
                  slots: Optional[int] = None,
                  vocab: Optional[Vocab] = None,
                  batch_size: int = 256,
+                 mesh=None,
+                 cache: bool = True,
+                 cache_size: int = 4096,
                  config: Optional[EngineConfig] = None,
                  **config_overrides):
         unknown = set(config_overrides) - _CONFIG_FIELDS
@@ -68,7 +85,9 @@ class GedEngine:
             config = dataclasses.replace(config, **config_overrides)
         self.slots = slots
         self.vocab = vocab
-        self._backend: Backend = make_backend(backend, batch_size=batch_size)
+        self._cache = ResultCache(cache_size) if cache else None
+        self._backend: Backend = make_backend(backend, batch_size=batch_size,
+                                              mesh=mesh)
         self.backend = self._backend.name
         # "jax" means pure-jnp and "pallas" means kernels; default the flag
         # from the backend name and refuse a contradicting user setting.
@@ -133,13 +152,26 @@ class GedEngine:
     # ------------------------------------------------------------ stats
 
     @property
+    def batch_multiple(self) -> int:
+        """Shard count every batch is padded to (1 on a single device)."""
+        return getattr(self._backend, "batch_multiple", 1)
+
+    @property
     def stats(self) -> Dict[str, float]:
-        """Backend counters plus compile-cache hit/miss totals."""
+        """Backend + executor counters plus cache hit/miss totals."""
         out: Dict[str, float] = dict(getattr(self._backend, "stats", {}))
+        executor = getattr(self._backend, "executor", None)
+        if executor is not None:
+            out.update({f"executor_{k}": v
+                        for k, v in executor.stats.items()})
         cache = getattr(self._backend, "cache", None)
         if cache is not None:
             out["compile_cache_hits"] = cache.stats.hits
             out["compile_cache_misses"] = cache.stats.misses
+        if self._cache is not None:
+            out["result_cache_hits"] = self._cache.hits
+            out["result_cache_misses"] = self._cache.misses
+            out["result_cache_entries"] = len(self._cache)
         return out
 
     # --------------------------------------------------------- internal
@@ -157,14 +189,52 @@ class GedEngine:
                 f"{self._kernel_default}")
         cfg = dataclasses.replace(self.config, **overrides) \
             if overrides else self.config
-        plan = build_plan(pairs, slots=self.slots, vocab=self.vocab)
-        n = len(plan.pairs)
+        pairs = as_pairs(pairs)
+        n = len(pairs)
         if verification:
             taus = np.broadcast_to(
                 np.asarray(tau, dtype=np.float32), (n,)).copy()
         else:
             taus = np.zeros((n,), dtype=np.float32)
-        return self._backend.run(plan, taus, verification, cfg)
+
+        results: List[Optional[GedOutcome]] = [None] * n
+        run_idx = list(range(n))
+        keys: List[Optional[tuple]] = [None] * n
+        dup_of: Dict[int, int] = {}
+        if self._cache is not None:
+            run_idx, seen = [], {}
+            for i, (q, g) in enumerate(pairs):
+                keys[i] = pair_key(
+                    q, g, verification,
+                    float(taus[i]) if verification else None, cfg,
+                    self.backend)
+                if keys[i] in seen:
+                    # duplicate within this batch: runs once, answers twice
+                    dup_of[i] = seen[keys[i]]
+                    self._cache.hits += 1
+                    continue
+                hit = self._cache.get(keys[i])
+                if hit is not None:
+                    results[i] = hit
+                else:
+                    seen[keys[i]] = i
+                    run_idx.append(i)
+
+        if run_idx:
+            plan = build_plan(
+                [pairs[i] for i in run_idx], slots=self.slots,
+                vocab=self.vocab, batch_multiple=self.batch_multiple)
+            outs = self._backend.run(plan, taus[run_idx], verification, cfg)
+            for i, o in zip(run_idx, outs):
+                results[i] = o
+                if self._cache is not None:
+                    self._cache.put(keys[i], o)
+        for i, j in dup_of.items():
+            # a distinct outcome per position, so mutating one entry
+            # cannot leak into its duplicates (or the cache)
+            results[i] = detached(results[j],
+                                  {**results[j].stats, "cached": True})
+        return results  # type: ignore[return-value]
 
 
 # ------------------------------------------------- module-level helpers

@@ -1,43 +1,49 @@
-"""Pluggable execution backends behind the ``repro.ged`` facade.
+"""Pluggable *policy* backends behind the ``repro.ged`` facade.
 
 Every backend implements one protocol — ``run(plan, taus, verification,
-cfg) -> List[GedOutcome]`` — over the bucketed :class:`repro.ged.plan.Plan`:
+cfg) -> List[GedOutcome]`` — over the bucketed :class:`repro.ged.plan.Plan`.
+Backends decide *what* runs (which rungs, which bounds, when to escalate);
+*how* a bucket reaches a device — placement, jit/compile caching, packing,
+unpacking — is the executor layer's job (:mod:`repro.ged.exec`), so a
+policy composes with any placement:
 
-* ``"exact"``  — the paper-faithful host solver (AStar+/DFS+ with BMa),
+* ``"exact"``   — the paper-faithful host solver (AStar+/DFS+ with BMa),
   one pair at a time.  Always certified; produces mappings.
-* ``"jax"``    — the batched vmap engine, one jit call per shape bucket,
+* ``"jax"``     — the batched vmap engine, one jit call per shape bucket,
   compile-cache aware.  Pure-jnp bound math (``use_kernel=False``).
-* ``"pallas"`` — same engine with the Pallas kernels enabled on the hot
+* ``"pallas"``  — same engine with the Pallas kernels enabled on the hot
   path (interpret mode on CPU, real kernels on TPU).
-* ``"auto"``   — the production pipeline: difficulty prediction, LPT
+* ``"sharded"`` — same policy as ``"jax"`` on a
+  :class:`~repro.ged.exec.ShardedExecutor`: the pair batch ``shard_map``-ed
+  over the device mesh, buckets padded to shard multiples.
+* ``"auto"``    — the production pipeline: difficulty prediction, LPT
   batch packing, escalation through growing engine rungs, host-solver
   final rung.  Every answer it returns is certified.
 
-New backends (sharded, async, remote, ...) register with
-:func:`register_backend` and become constructible via
-``GedEngine(backend="name")`` with no facade changes.
+New backends (async, remote, ...) register with :func:`register_backend`
+and become constructible via ``GedEngine(backend="name")`` with no facade
+changes.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Protocol, Sequence
+from typing import Callable, Dict, List, Optional, Protocol
 
 import numpy as np
 
-from repro.core.engine import api as engine_api
 from repro.core.engine.search import EngineConfig
 from repro.core.exact.search import ged as exact_ged
 from repro.core.exact.search import ged_verify
-from repro.ged.plan import (Bucket, CompileCache, Plan, pack_bucket,
-                            pad_tail, slot_bucket)
-from repro.ged.results import GedOutcome, engine_mapping
+from repro.ged.exec import (Executor, ShardedExecutor, engine_outcome)
+from repro.ged.plan import Plan, pad_tail, slot_bucket
+from repro.ged.results import GedOutcome
 from repro.runtime.scheduler import GedScheduler, difficulty
 
 
 class Backend(Protocol):
-    """What the facade requires of an execution backend."""
+    """What the facade requires of an execution-policy backend."""
 
     name: str
     # What ``EngineConfig.use_kernel`` must be for this backend; ``None``
@@ -59,6 +65,7 @@ class ExactBackend:
 
     name = "exact"
     kernel_default = None  # host solver: kernels irrelevant
+    batch_multiple = 1     # host solver: no device batch shape to satisfy
 
     def run(self, plan: Plan, taus: np.ndarray, verification: bool,
             cfg: EngineConfig) -> List[GedOutcome]:
@@ -103,29 +110,37 @@ def _host_verify_outcome(res, tau: float, backend: str, wall_s: float,
 # --------------------------------------------------------- batched engine
 
 class EngineBackend:
-    """Batched vmap engine, one jit call per shape bucket.
+    """Bucket-at-a-time policy over an :class:`~repro.ged.exec.Executor`.
 
     ``cfg.use_kernel`` is taken as-is — ``GedEngine`` defaults it per
-    backend name (``jax`` -> False, ``pallas`` -> True) and rejects
-    contradictions, so the flag always matches what the user asked for.
+    backend name (``jax``/``sharded`` -> False, ``pallas`` -> True) and
+    rejects contradictions, so the flag always matches what the user asked
+    for.
     """
 
     name = "jax"
     kernel_default = False
 
-    def __init__(self) -> None:
-        self.cache = CompileCache()
+    def __init__(self, executor: Optional[Executor] = None) -> None:
+        self.executor = executor or Executor()
+
+    @property
+    def cache(self):
+        return self.executor.cache
+
+    @property
+    def batch_multiple(self) -> int:
+        return self.executor.batch_multiple
 
     def run(self, plan: Plan, taus: np.ndarray, verification: bool,
             cfg: EngineConfig) -> List[GedOutcome]:
         results: List[Optional[GedOutcome]] = [None] * len(plan.pairs)
         for bucket in plan.buckets:
             t0 = time.perf_counter()
-            out = run_bucket(bucket.packed, bucket.pad_values(taus), cfg,
-                             verification, self.cache)
+            out = self.executor.run_bucket(bucket, taus, cfg, verification)
             wall = time.perf_counter() - t0
             for bi, gi in enumerate(bucket.indices):
-                results[gi] = _engine_outcome(
+                results[gi] = engine_outcome(
                     out, bucket.packed, bi, verification,
                     float(taus[gi]) if verification else None,
                     self.name, wall, rung=0)
@@ -133,51 +148,25 @@ class EngineBackend:
 
 
 class PallasBackend(EngineBackend):
-    """Engine backend with Pallas kernels on the hot path."""
+    """Engine policy with Pallas kernels on the hot path."""
 
     name = "pallas"
     kernel_default = True
 
 
-def run_bucket(packed, taus: np.ndarray, cfg: EngineConfig,
-               verification: bool,
-               cache: Optional[CompileCache] = None) -> Dict[str, np.ndarray]:
-    """One engine invocation over a packed bucket; numpy result dict."""
-    import jax.numpy as jnp
+class ShardedBackend(EngineBackend):
+    """Engine policy on a mesh-sharded executor (``shard_map`` over pairs).
 
-    if cache is not None:
-        cache.record(packed, cfg, verification)
-    args = engine_api.pair_tuple(packed)
-    out = engine_api._run_batch(
-        *args, jnp.asarray(np.asarray(taus, dtype=np.float32)), cfg,
-        bool(verification), packed.n_vlabels, packed.n_elabels)
-    return {k: np.asarray(v) for k, v in out.items()}
+    Identical policy (and therefore identical outcomes) to ``"jax"``; only
+    the placement differs.  ``mesh`` defaults to a 1-D mesh over every
+    local device.
+    """
 
+    name = "sharded"
+    kernel_default = False
 
-def _engine_outcome(out: Dict[str, np.ndarray], packed, bi: int,
-                    verification: bool, tau: Optional[float], backend: str,
-                    wall_s: float, rung: int) -> GedOutcome:
-    certified = bool(out["exact"][bi])
-    n = int(packed.n[bi])
-    mapping = engine_mapping(packed.order[bi], out["best_img"][bi], n)
-    stats = {"rung": rung,
-             "iterations": float(out["iterations"][bi]),
-             "expanded": float(out["expanded"][bi])}
-    lb = float(out["lower_bound"][bi])
-    if verification:
-        similar = bool(out["similar"][bi])
-        ub = float(out["upper_bound"][bi])
-        return GedOutcome(
-            ged=None, similar=similar, certified=certified,
-            lower_bound=lb, upper_bound=ub if similar else float("inf"),
-            mapping=mapping if similar else None,
-            backend=backend, wall_s=wall_s, tau=tau, stats=stats)
-    raw = float(out["ged"][bi])
-    ged = float(np.rint(raw)) if certified else raw
-    return GedOutcome(
-        ged=ged, similar=None, certified=certified,
-        lower_bound=min(lb, ged), upper_bound=ged,
-        mapping=mapping, backend=backend, wall_s=wall_s, stats=stats)
+    def __init__(self, mesh=None) -> None:
+        super().__init__(ShardedExecutor(mesh))
 
 
 # ------------------------------------------------------------ escalation
@@ -195,15 +184,23 @@ class AutoBackend:
     name = "auto"
     kernel_default = None  # honors cfg.use_kernel on the engine rungs
 
-    def __init__(self, batch_size: int = 256):
+    def __init__(self, batch_size: int = 256,
+                 executor: Optional[Executor] = None):
         self.scheduler = GedScheduler(batch_size)
-        self.cache = CompileCache()
+        self.executor = executor or Executor()
         self.stats: Dict[str, float] = {"pairs": 0, "escalated": 0,
                                         "host_solved": 0, "batches": 0}
 
+    @property
+    def cache(self):
+        return self.executor.cache
+
+    @property
+    def batch_multiple(self) -> int:
+        return self.executor.batch_multiple
+
     def run(self, plan: Plan, taus: np.ndarray, verification: bool,
             cfg: EngineConfig) -> List[GedOutcome]:
-        t0 = time.time()
         results: List[Optional[GedOutcome]] = [None] * len(plan.pairs)
         diffs = [difficulty(q.n, g.n, q.m, g.m, q.vlabels, g.vlabels,
                             tau=float(taus[i]) if verification else None)
@@ -220,18 +217,19 @@ class AutoBackend:
                 for gi in batch.indices:
                     q, g = plan.pairs[gi]
                     self.stats["host_solved"] += 1
-                    wall = time.time() - t0
+                    t0 = time.perf_counter()
                     if verification:
                         res = ged_verify(q, g, float(taus[gi]), bound="BMa",
                                          strategy=cfg.strategy)
                         results[gi] = _host_verify_outcome(
                             res, float(taus[gi]), f"{self.name}/exact",
-                            wall, rung=-1)
+                            time.perf_counter() - t0, rung=-1)
                     else:
                         res = exact_ged(q, g, bound="BMa",
                                         strategy=cfg.strategy)
                         results[gi] = _host_compute_outcome(
-                            res, f"{self.name}/exact", wall, rung=-1)
+                            res, f"{self.name}/exact",
+                            time.perf_counter() - t0, rung=-1)
                 continue
 
             pool, expand, max_iters = params
@@ -240,17 +238,21 @@ class AutoBackend:
             sub = [plan.pairs[gi] for gi in batch.indices]
             slots = plan.fixed_slots or slot_bucket(
                 max(max(q.n, g.n) for q, g in sub))
-            packed, _ = pack_bucket(sub, slots, plan.vocab)
+            packed, _ = self.executor.pack(sub, slots, plan.vocab)
             sub_taus = pad_tail(
                 np.asarray([taus[gi] for gi in batch.indices],
                            dtype=np.float32), packed.batch)
-            out = run_bucket(packed, sub_taus, rcfg, verification, self.cache)
-            wall = time.time() - t0
+            t0 = time.perf_counter()
+            out = self.executor.run_packed(packed, sub_taus, rcfg,
+                                           verification, real=len(sub))
+            # per-batch wall, not cumulative-since-run-start: a pair's
+            # reported wall_s is the cost of the batch that answered it.
+            wall = time.perf_counter() - t0
 
             uncertified = []
             for bi, gi in enumerate(batch.indices):
                 if bool(out["exact"][bi]):
-                    results[gi] = _engine_outcome(
+                    results[gi] = engine_outcome(
                         out, packed, bi, verification,
                         float(taus[gi]) if verification else None,
                         self.name, wall, rung=batch.rung)
@@ -300,4 +302,5 @@ def make_backend(name: str, **options) -> Backend:
 register_backend("exact", ExactBackend)
 register_backend("jax", EngineBackend)
 register_backend("pallas", PallasBackend)
+register_backend("sharded", ShardedBackend)
 register_backend("auto", AutoBackend)

@@ -1,0 +1,248 @@
+"""The execution layer under the ``repro.ged`` facade.
+
+Backends (:mod:`repro.ged.backends`) are pure *policies* — which pairs run
+at which rung, with which bounds, when to escalate.  Everything about *how*
+a packed bucket actually reaches silicon lives here:
+
+* :class:`Executor` — default placement: one jit call per shape bucket on
+  the default device, compile-cache bookkeeping, bucket packing and result
+  unpacking.  Every backend drives one of these.
+* :class:`ShardedExecutor` — ``shard_map`` the vmapped search over the
+  device mesh's batch axes (``pod`` x ``data`` per
+  :func:`repro.parallel.sharding.default_rules`), with bucket batches
+  padded to shard multiples by :mod:`repro.ged.plan`.  The search's
+  sort-based ``top_k_sorted`` path keeps the pair batch sharded (the
+  ``lax.top_k`` custom-call would all-gather it — see
+  ``repro/parallel/ops.py``).
+* :class:`ResultCache` — engine-level outcome cache keyed on canonical
+  pair digests (label-vocab-independent, tau-aware for verification) that
+  :class:`repro.ged.GedEngine` consults before any executor runs.
+
+Policy and placement compose freely: any backend policy runs unchanged on
+any executor, which is what future async / remote / multi-host work hangs
+off.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core.engine import api as engine_api
+from repro.core.engine.search import EngineConfig
+from repro.core.exact.graph import Graph
+from repro.ged.plan import Bucket, CompileCache, Vocab, pack_bucket
+from repro.ged.results import GedOutcome, engine_mapping
+
+
+# ---------------------------------------------------------------- executors
+
+class Executor:
+    """Runs packed buckets on the default device.
+
+    Owns the things backends used to hand-roll: the compile-cache mirror,
+    batch-shape policy (``batch_multiple``), packing, and invocation
+    counters (``stats``) — so a policy layer above never touches jit, jax
+    arrays, or device placement.
+    """
+
+    name = "local"
+
+    def __init__(self) -> None:
+        self.cache = CompileCache()
+        self.stats: Dict[str, float] = {"calls": 0, "pairs": 0}
+
+    @property
+    def batch_multiple(self) -> int:
+        """Every bucket batch must be a multiple of this (shard count)."""
+        return 1
+
+    def pack(self, pairs, slots: int, vocab: Optional[Vocab]):
+        """Pack ``pairs`` with this executor's batch-shape policy."""
+        return pack_bucket(pairs, slots, vocab, self.batch_multiple)
+
+    def run_packed(self, packed, taus: np.ndarray, cfg: EngineConfig,
+                   verification: bool,
+                   real: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """One engine invocation over a packed bucket; numpy result dict.
+
+        ``real`` — pairs before batch padding, for the ``pairs`` counter
+        (defaults to the padded batch when the caller doesn't know)."""
+        self._check_batch(packed)
+        self.cache.record(packed, cfg, verification)
+        self.stats["calls"] += 1
+        self.stats["pairs"] += packed.batch if real is None else int(real)
+        return self._invoke(packed, taus, cfg, verification)
+
+    def run_bucket(self, bucket: Bucket, taus: np.ndarray, cfg: EngineConfig,
+                   verification: bool) -> Dict[str, np.ndarray]:
+        """Run one plan bucket; ``taus`` is the plan-global per-pair array."""
+        return self.run_packed(bucket.packed, bucket.pad_values(taus), cfg,
+                               verification, real=bucket.real)
+
+    # ------------------------------------------------------------ internal
+
+    def _check_batch(self, packed) -> None:
+        mult = self.batch_multiple
+        if packed.batch % mult:
+            raise ValueError(
+                f"batch {packed.batch} is not a multiple of the executor's "
+                f"{mult} shards; pack with batch_multiple={mult} "
+                "(GedEngine does this automatically)")
+
+    def _invoke(self, packed, taus, cfg, verification):
+        return engine_api.run_packed(packed, taus, cfg, verification)
+
+
+class ShardedExecutor(Executor):
+    """``shard_map`` the vmapped search over the mesh's batch axes.
+
+    ``mesh`` defaults to a 1-D ``("data",)`` mesh over every local device;
+    production meshes from :mod:`repro.launch.mesh` work as-is — the shard
+    axes come from the ``"pairs"`` row of
+    :func:`repro.parallel.sharding.default_rules` (``pod`` + ``data``),
+    matching how the serving dry-run places pair batches.
+    """
+
+    name = "sharded"
+
+    def __init__(self, mesh=None, axes: Optional[Sequence[str]] = None):
+        super().__init__()
+        import jax
+        if mesh is None:
+            mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        self.mesh = mesh
+        if axes is None:
+            from repro.parallel.sharding import pairs_axes
+            axes = pairs_axes(mesh)
+        self.axes = tuple(axes)
+        self._fns: Dict[tuple, object] = {}
+
+    @property
+    def batch_multiple(self) -> int:
+        from repro.parallel.sharding import default_rules
+        return default_rules(self.mesh).mesh_size(self.axes)
+
+    def _invoke(self, packed, taus, cfg, verification):
+        import jax
+        import jax.numpy as jnp
+
+        key = (cfg, bool(verification), packed.n_vlabels, packed.n_elabels)
+        fn = self._fns.get(key)
+        if fn is None:
+            from jax.sharding import PartitionSpec as P
+
+            from repro.parallel.ops import shard_map
+            spec = P(self.axes)  # leading (batch) dim sharded, rest local
+
+            def local_shard(qv, gv, qa, ga, order, n, t):
+                return engine_api._run_batch(qv, gv, qa, ga, order, n, t,
+                                             *key)
+
+            fn = jax.jit(shard_map(local_shard, mesh=self.mesh,
+                                   in_specs=(spec,) * 7, out_specs=spec,
+                                   check=False))
+            self._fns[key] = fn
+        args = engine_api.pair_tuple(packed)
+        out = fn(*args, jnp.asarray(np.asarray(taus, dtype=np.float32)))
+        return {k: np.asarray(v) for k, v in out.items()}
+
+
+# ----------------------------------------------------------- result unpack
+
+def engine_outcome(out: Dict[str, np.ndarray], packed, bi: int,
+                   verification: bool, tau: Optional[float], backend: str,
+                   wall_s: float, rung: int) -> GedOutcome:
+    """One :class:`GedOutcome` from row ``bi`` of an executor result dict."""
+    certified = bool(out["exact"][bi])
+    n = int(packed.n[bi])
+    mapping = engine_mapping(packed.order[bi], out["best_img"][bi], n)
+    stats = {"rung": rung,
+             "iterations": float(out["iterations"][bi]),
+             "expanded": float(out["expanded"][bi])}
+    lb = float(out["lower_bound"][bi])
+    if verification:
+        similar = bool(out["similar"][bi])
+        ub = float(out["upper_bound"][bi])
+        return GedOutcome(
+            ged=None, similar=similar, certified=certified,
+            lower_bound=lb, upper_bound=ub if similar else float("inf"),
+            mapping=mapping if similar else None,
+            backend=backend, wall_s=wall_s, tau=tau, stats=stats)
+    raw = float(out["ged"][bi])
+    ged = float(np.rint(raw)) if certified else raw
+    return GedOutcome(
+        ged=ged, similar=None, certified=certified,
+        lower_bound=min(lb, ged), upper_bound=ged,
+        mapping=mapping, backend=backend, wall_s=wall_s, stats=stats)
+
+
+# ------------------------------------------------------------ result cache
+
+def graph_digest(g: Graph) -> bytes:
+    """Canonical digest of one graph, independent of any batch label vocab.
+
+    Hashes the concrete representation (raw int64 labels + adjacency), so
+    equality means *identical* graphs — mappings in cached outcomes stay
+    index-compatible — and the digest never changes with whichever other
+    pairs happened to share a batch.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64(g.n).tobytes())
+    h.update(np.ascontiguousarray(g.vlabels, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(g.adj, dtype=np.int64).tobytes())
+    return h.digest()
+
+
+def pair_key(q: Graph, g: Graph, verification: bool, tau: Optional[float],
+             cfg: EngineConfig, backend: str) -> tuple:
+    """Cache key for one query: pair digests + mode (tau-aware) + config."""
+    return (graph_digest(q), graph_digest(g), bool(verification),
+            None if tau is None else float(tau), cfg, backend)
+
+
+def detached(outcome: GedOutcome, stats: Dict[str, float]) -> GedOutcome:
+    """An independent copy of ``outcome`` — own stats dict, own mapping
+    array — with ``stats`` swapped in.  Callers may mutate what they are
+    handed without corrupting a cached entry (or a duplicate's answer)."""
+    mapping = None if outcome.mapping is None else np.array(outcome.mapping)
+    return dataclasses.replace(outcome, mapping=mapping, stats=stats)
+
+
+class ResultCache:
+    """LRU cache of :class:`GedOutcome` keyed by :func:`pair_key`.
+
+    Sits in front of every executor (``GedEngine`` consults it before
+    planning), so duplicate pairs — across calls or within one batch —
+    never re-execute, whatever the backend.
+    """
+
+    def __init__(self, maxsize: int = 4096):
+        self.maxsize = int(maxsize)
+        self._entries: "collections.OrderedDict[tuple, GedOutcome]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: tuple) -> Optional[GedOutcome]:
+        out = self._entries.get(key)
+        if out is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        # wall_s stays the cost of the run that produced the entry
+        return detached(out, {**out.stats, "cached": True})
+
+    def put(self, key: tuple, outcome: GedOutcome) -> None:
+        self._entries[key] = detached(outcome, dict(outcome.stats))
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)

@@ -103,15 +103,28 @@ def pad_tail(values: np.ndarray, batch: int) -> np.ndarray:
                                           axis=0)])
 
 
+def padded_batch(real: int, batch_multiple: int = 1) -> int:
+    """Batch size after padding: the power of two >= ``real``, rounded up to
+    a multiple of ``batch_multiple`` (the executor's shard count, so every
+    device mesh shard receives an equal slice)."""
+    b = _pow2(real)
+    if b % batch_multiple:
+        b = -(-b // batch_multiple) * batch_multiple
+    return b
+
+
 def pack_bucket(
     pairs: Sequence[Tuple[Graph, Graph]],
     slots: int,
     vocab: Optional[Vocab],
+    batch_multiple: int = 1,
 ) -> Tuple[GraphPairTensors, int]:
-    """Pack ``pairs`` at ``slots``, padding the batch dim to a power of two
-    (the filler repeats the last pair).  Returns ``(tensors, real_count)``."""
+    """Pack ``pairs`` at ``slots``, padding the batch dim to
+    :func:`padded_batch` (the filler repeats the last pair).  Returns
+    ``(tensors, real_count)``."""
     real = len(pairs)
-    padded = list(pairs) + [pairs[-1]] * (_pow2(real) - real)
+    padded = list(pairs) + [pairs[-1]] * (padded_batch(real, batch_multiple)
+                                          - real)
     return pack_pairs(padded, slots=slots, vocab=vocab), real
 
 
@@ -139,8 +152,13 @@ def build_plan(
     raw_pairs,
     slots: Optional[int] = None,
     vocab: Optional[Vocab] = None,
+    batch_multiple: int = 1,
 ) -> Plan:
-    """Ingest ``raw_pairs`` and group them into canonical-shape buckets."""
+    """Ingest ``raw_pairs`` and group them into canonical-shape buckets.
+
+    ``batch_multiple`` — pad every bucket's batch to a multiple of this
+    (the executor's shard count; 1 for single-device execution).
+    """
     pairs = as_pairs(raw_pairs)
     if vocab is None:
         vocab = label_vocab(pairs)
@@ -154,7 +172,8 @@ def build_plan(
     buckets = []
     for s in sorted(by_slots):
         idxs = by_slots[s]
-        packed, real = pack_bucket([pairs[i] for i in idxs], s, vocab)
+        packed, real = pack_bucket([pairs[i] for i in idxs], s, vocab,
+                                   batch_multiple)
         buckets.append(Bucket(s, idxs, packed, real))
     return Plan(pairs, buckets, vocab, slots)
 

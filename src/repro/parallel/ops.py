@@ -14,9 +14,34 @@ used here the sort costs the same MXU-free VPU pass the custom-call would.
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Callable, Optional, Tuple
 
 import jax.numpy as jnp
+
+
+def shard_map(f: Optional[Callable] = None, *, mesh, in_specs, out_specs,
+              check: bool = False):
+    """Version-portable ``shard_map`` (usable bare or as a decorator factory).
+
+    Newer jax exposes ``jax.shard_map`` (replication check flag spelled
+    ``check_vma``); this jaxlib only has ``jax.experimental.shard_map``
+    (spelled ``check_rep``).  Resolve whichever exists and translate the
+    ``check`` flag, so callers never touch the moving API surface.
+    """
+    import inspect
+
+    import jax
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    params = inspect.signature(sm).parameters
+    flag = "check_vma" if "check_vma" in params else "check_rep"
+
+    def wrap(fn: Callable) -> Callable:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  **{flag: check})
+
+    return wrap if f is None else wrap(f)
 
 
 def top_k_sorted(x: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:

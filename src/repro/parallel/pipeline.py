@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.parallel.ops import shard_map
+
 
 def pipeline_apply(stage_fn: Callable, stage_params: Any, x: jnp.ndarray,
                    mesh: Mesh, axis: str = "pod",
@@ -47,10 +49,10 @@ def pipeline_apply(stage_fn: Callable, stage_params: Any, x: jnp.ndarray,
     other = tuple(a for a in mesh.axis_names if a != axis)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(pspec_params, P(None)),
         out_specs=P(None),
-        check_vma=False)
+        check=False)
     def run(params_s, xs_rep):
         # params_s has leading dim 1 on each device (its stage's slice)
         params_local = jax.tree.map(lambda a: a[0], params_s)

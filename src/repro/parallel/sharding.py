@@ -111,3 +111,15 @@ def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
 def named_sharding(rules: ShardingRules, shape: Sequence[int],
                    axes: Sequence[Optional[str]]) -> NamedSharding:
     return NamedSharding(rules.mesh, logical_spec(shape, axes, rules))
+
+
+def pairs_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that carry GED verification pairs (the ``"pairs"`` logical
+    axis of :func:`default_rules`): ``pod`` x ``data`` on production meshes,
+    the first axis of an unnamed-convention mesh.  The sharded GED executor
+    (``repro.ged.exec.ShardedExecutor``) shards pair batches over exactly
+    these axes."""
+    mapped = default_rules(mesh).table.get("pairs")
+    if isinstance(mapped, str):
+        return (mapped,)
+    return tuple(mapped) if mapped else (mesh.axis_names[0],)

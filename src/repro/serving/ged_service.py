@@ -9,6 +9,9 @@ solver as the final rung) lives in ``repro.ged.backends.AutoBackend``;
 this service is a thin request/response wrapper over
 ``repro.ged.GedEngine(backend="auto")``.  Every answer it returns is
 certified exact, and every answer is a ``repro.ged.GedOutcome``.
+Duplicate requests — the common case for similarity-search traffic —
+are deduplicated by the engine's result cache (tau-aware), so repeats
+cost a hash lookup, not a search.
 ``GedResult`` aliases it for *readers* of the old result type (the
 ``similar``/``ged``/``certified``/``rung``/``wall_s`` fields survive);
 code that *constructed* ``GedResult`` must switch to ``GedOutcome``'s
@@ -36,17 +39,19 @@ class GedRequest:
 class GedVerificationService:
     def __init__(self, batch_size: int = 256, slots: int = 32,
                  strategy: str = "astar", bound: str = "hybrid",
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, cache_size: int = 4096):
         self.engine = GedEngine(
             backend="auto", slots=slots, batch_size=batch_size,
-            strategy=strategy, bound=bound, use_kernel=use_kernel)
+            strategy=strategy, bound=bound, use_kernel=use_kernel,
+            cache_size=cache_size)
         # exposed for tests/tuning: mutating ``scheduler.rungs`` reshapes
         # the escalation ladder of the underlying auto backend.
         self.scheduler = self.engine._backend.scheduler
 
     @property
     def stats(self) -> Dict[str, float]:
-        return self.engine._backend.stats
+        """Pipeline counters plus executor / cache hit totals."""
+        return self.engine.stats
 
     # ------------------------------------------------------------ public
 

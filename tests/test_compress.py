@@ -39,6 +39,7 @@ PSUM = textwrap.dedent("""
     import sys; sys.path.insert(0, %r)
     import jax, jax.numpy as jnp, numpy as np
     from repro.optim.compress import psum_compressed
+    from repro.parallel.ops import shard_map
 
     mesh = jax.make_mesh((4,), ("pod",))
     rng = np.random.default_rng(0)
@@ -51,9 +52,9 @@ PSUM = textwrap.dedent("""
             out, new_r = psum_compressed({"g": g_s[0]}, {"g": r_s[0]}, "pod")
             return out["g"][None], new_r["g"][None]
         from jax.sharding import PartitionSpec as P
-        return jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                             out_specs=(P("pod"), P("pod")),
-                             check_vma=False)(g, r)
+        return shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                         out_specs=(P("pod"), P("pod")),
+                         check=False)(g, r)
 
     out, new_r = run(grads, res)
     want = np.mean(np.asarray(grads), axis=0)

@@ -1,5 +1,11 @@
 """The ``repro.ged`` facade: backend parity, bucketed compile reuse,
-ingestion adapters, streaming, and the unified result schema."""
+ingestion adapters, streaming, the sharded executor, the engine-level
+result cache, and the unified result schema."""
+
+import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 import pytest
@@ -192,7 +198,7 @@ def test_slot_bucket_is_pow2_and_monotone():
 
 def test_backend_registry_round_trip():
     assert set(ged.available_backends()) >= {"exact", "jax", "pallas",
-                                             "auto"}
+                                             "sharded", "auto"}
     with pytest.raises(ValueError):
         ged.GedEngine("no-such-backend")
 
@@ -222,3 +228,177 @@ def test_module_level_one_shots():
     assert [o.ged for o in outs] == truth
     vers = ged.verify(pairs, truth, backend="auto")
     assert all(o.similar for o in vers)
+
+
+# ------------------------------------------------- sharded executor layer
+
+ENGINE_OPTS = dict(pool=256, expand=4, max_iters=256)
+
+
+def test_sharded_backend_matches_jax_backend():
+    """Same policy, different placement => identical outcomes (compute and
+    verification), whatever the local device count."""
+    pairs = _small_pairs(12, 10)
+    a = ged.GedEngine("jax", **ENGINE_OPTS).compute(pairs)
+    b = ged.GedEngine("sharded", **ENGINE_OPTS).compute(pairs)
+    for oa, ob in zip(a, b):
+        assert (oa.ged, oa.certified, oa.lower_bound) == \
+            (ob.ged, ob.certified, ob.lower_bound)
+        assert ob.backend == "sharded"
+    for tau in (2.0, 4.0):
+        va = ged.GedEngine("jax", **ENGINE_OPTS).verify(pairs, tau)
+        vb = ged.GedEngine("sharded", **ENGINE_OPTS).verify(pairs, tau)
+        for oa, ob in zip(va, vb):
+            assert (oa.similar, oa.certified) == (ob.similar, ob.certified)
+
+
+SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, %r)
+    import jax, numpy as np
+    from repro import ged
+    from repro.data.graphs import perturb, random_graph
+
+    assert jax.device_count() == 8
+    rng = np.random.default_rng(5)
+    pairs = []
+    for _ in range(11):     # odd count: padded to 16 (a multiple of 8)
+        q = random_graph(rng, int(rng.integers(4, 10)), density=0.4,
+                         n_vlabels=3, n_elabels=2)
+        pairs.append((q, perturb(rng, q, 3, n_vlabels=3, n_elabels=2)))
+    opts = dict(pool=256, expand=4, max_iters=256)
+
+    ref = ged.GedEngine("jax", **opts).compute(pairs)
+    eng = ged.GedEngine("sharded", **opts)
+    assert eng.batch_multiple == 8
+    got = eng.compute(pairs)
+    assert [(o.ged, o.certified) for o in got] == \\
+        [(o.ged, o.certified) for o in ref]
+
+    vref = ged.GedEngine("jax", **opts).verify(pairs, 4.0)
+    vgot = ged.GedEngine("sharded", **opts).verify(pairs, 4.0)
+    assert [(o.similar, o.certified) for o in vgot] == \\
+        [(o.similar, o.certified) for o in vref]
+
+    # production-shaped 2-D mesh: pairs shard over the batch axes only
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    v2d = ged.GedEngine("sharded", mesh=mesh, **opts).verify(pairs, 4.0)
+    assert [(o.similar, o.certified) for o in v2d] == \\
+        [(o.similar, o.certified) for o in vref]
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_backend_parity_on_8_devices():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT % src],
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+def test_shard_padding_round_trip():
+    """Buckets padded to shard multiples still answer exactly the real
+    pairs, in order, with the same results as unpadded planning."""
+    from repro.ged.plan import build_plan, padded_batch
+
+    assert [padded_batch(r, 1) for r in (1, 3, 5, 8)] == [1, 4, 8, 8]
+    assert [padded_batch(r, 8) for r in (1, 3, 8, 9)] == [8, 8, 8, 16]
+    assert padded_batch(4, 6) == 6 and padded_batch(7, 6) == 12
+
+    pairs = _sized_pairs(14, [3, 5, 8, 4, 6])
+    plain = build_plan(pairs)
+    padded = build_plan(pairs, batch_multiple=8)
+    for plan in (plain, padded):
+        covered = sorted(i for b in plan.buckets for i in b.indices)
+        assert covered == list(range(len(pairs)))
+    assert all(b.packed.batch % 8 == 0 for b in padded.buckets)
+
+    from repro.core.engine.search import EngineConfig
+    from repro.ged.backends import EngineBackend
+    cfg = EngineConfig(use_kernel=False, **ENGINE_OPTS)
+    taus = np.zeros(len(pairs), dtype=np.float32)
+    a = EngineBackend().run(plain, taus, False, cfg)
+    b = EngineBackend().run(padded, taus, False, cfg)
+    assert [(o.ged, o.certified) for o in a] == \
+        [(o.ged, o.certified) for o in b]
+
+
+# ------------------------------------------------------- result caching
+
+def test_result_cache_answers_repeats_without_reexecution():
+    eng = ged.GedEngine("jax", **ENGINE_OPTS)
+    pairs = _small_pairs(13, 5)
+    first = eng.compute(pairs)
+    calls = eng.stats["executor_calls"]
+    assert eng.stats["result_cache_misses"] == len(pairs)
+
+    t0 = run_batch_traces()
+    second = eng.compute(pairs)
+    assert run_batch_traces() - t0 == 0, "cached pairs must not re-compile"
+    assert eng.stats["executor_calls"] == calls, \
+        "cached pairs must not re-execute"
+    assert eng.stats["result_cache_hits"] == len(pairs)
+    for a, b in zip(first, second):
+        assert (a.ged, a.certified) == (b.ged, b.certified)
+        assert b.stats.get("cached") and not a.stats.get("cached")
+
+
+def test_result_cache_dedups_within_one_batch():
+    eng = ged.GedEngine("jax", **ENGINE_OPTS)
+    (p0, p1) = _small_pairs(15, 2)
+    outs = eng.compute([p0, p0, p1, p0])
+    assert eng.stats["result_cache_misses"] == 2
+    assert eng.stats["result_cache_hits"] == 2
+    assert eng.stats["executor_pairs"] == 2     # only the unique pairs ran
+    assert outs[0].ged == outs[1].ged == outs[3].ged
+    # every position is its own outcome: mutating one entry (stats dict
+    # or mapping array) must not leak into duplicates or later cache hits
+    outs[1].stats["caller_tag"] = 1
+    assert "caller_tag" not in outs[3].stats
+    if outs[1].mapping is not None:
+        outs[1].mapping[:] = -7
+        assert not np.array_equal(outs[3].mapping, outs[1].mapping)
+    again = eng.compute([p0])[0]
+    assert "caller_tag" not in again.stats
+    if again.mapping is not None:
+        assert not np.array_equal(again.mapping, outs[1].mapping)
+
+
+def test_result_cache_is_tau_and_mode_aware():
+    eng = ged.GedEngine("jax", **ENGINE_OPTS)
+    pairs = _small_pairs(16, 3)
+    eng.compute(pairs)
+    eng.verify(pairs, 3.0)              # different mode: all misses
+    assert eng.stats["result_cache_hits"] == 0
+    eng.verify(pairs, 4.0)              # different tau: all misses
+    assert eng.stats["result_cache_hits"] == 0
+    eng.verify(pairs, 3.0)              # same tau: all hits
+    assert eng.stats["result_cache_hits"] == len(pairs)
+
+
+def test_result_cache_key_is_vocab_independent():
+    """The same pair hits the cache even when its batch companions change
+    the shared label vocabulary."""
+    rng = np.random.default_rng(17)
+    q = random_graph(rng, 4, density=0.4, n_vlabels=2, n_elabels=1)
+    p0 = (q, perturb(rng, q, 1, n_vlabels=2, n_elabels=1))
+    rich = random_graph(rng, 5, density=0.5, n_vlabels=6, n_elabels=3)
+    p1 = (rich, perturb(rng, rich, 2, n_vlabels=6, n_elabels=3))
+    eng = ged.GedEngine("jax", **ENGINE_OPTS)
+    eng.compute([p0])
+    eng.compute([p0, p1])               # bigger vocab, same p0
+    assert eng.stats["result_cache_hits"] == 1
+
+
+def test_cache_can_be_disabled():
+    eng = ged.GedEngine("jax", cache=False, **ENGINE_OPTS)
+    pairs = _small_pairs(18, 3)
+    eng.compute(pairs)
+    calls = eng.stats["executor_calls"]
+    eng.compute(pairs)
+    assert "result_cache_hits" not in eng.stats
+    assert eng.stats["executor_calls"] == 2 * calls  # repeats re-execute
