@@ -40,6 +40,28 @@ def record(name: str, rows: List[Dict[str, Any]]) -> None:
     (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
 
 
+def record_section(name: str, section: str, rows: List[Dict[str, Any]]
+                   ) -> None:
+    """Merge one named section into ``results/bench/{name}.json``.
+
+    The file holds ``{section: rows, ...}`` so benchmark functions that
+    run at different times (backend throughput, escalation overlap)
+    contribute to one trajectory record without clobbering each other.
+    """
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{name}.json"
+    data: Dict[str, Any] = {}
+    if path.exists():
+        try:
+            existing = json.loads(path.read_text())
+            if isinstance(existing, dict):
+                data = existing
+        except ValueError:
+            pass                      # unreadable/legacy layout: rewrite
+    data[section] = rows
+    path.write_text(json.dumps(data, indent=1))
+
+
 def print_table(title: str, rows: List[Dict[str, Any]],
                 cols: List[str]) -> None:
     print(f"\n== {title} ==")

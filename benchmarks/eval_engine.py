@@ -16,7 +16,8 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import groups, print_table, record, timed
+from benchmarks.common import (groups, print_table, record, record_section,
+                               timed)
 from repro.core.exact.search import ged as exact_ged
 from repro.ged import GedEngine
 
@@ -200,8 +201,9 @@ def kernel_validation(quick=True) -> List[Dict]:
 def engine_backend_throughput(quick=True) -> List[Dict]:
     """Single-device vs mesh-sharded executor throughput.
 
-    Emits ``results/bench/BENCH_engine.json`` — the perf-trajectory record
-    the ROADMAP's scaling work is judged against.  On one CPU device the
+    Emits the ``backend_throughput`` section of
+    ``results/bench/BENCH_engine.json`` — the perf-trajectory record the
+    ROADMAP's scaling work is judged against.  On one CPU device the
     sharded path should roughly match ``jax`` (same compute + shard_map
     overhead); the row captures the device count so multi-chip runs are
     comparable.
@@ -231,13 +233,69 @@ def engine_backend_throughput(quick=True) -> List[Dict]:
     print_table("Engine backend throughput (single-device vs sharded)",
                 rows, ["backend", "devices", "batch_multiple", "pairs",
                        "pairs_per_s", "compile_s", "certified_frac"])
-    record("BENCH_engine", rows)
+    record_section("BENCH_engine", "backend_throughput", rows)
+    return rows
+
+
+def engine_escalation_overlap(quick=True) -> List[Dict]:
+    """Sequential vs overlapped rung execution in the ``auto`` pipeline.
+
+    A small first rung forces real escalation (and a host-solver tail),
+    which is where overlap pays: while one batch is in flight the
+    scheduler drains decided pairs, re-buckets survivors, and host-solves
+    final-rung pairs behind the device work.  Outcomes must be identical
+    in both modes; only the wall-clock differs.  The comparison lands in
+    the ``escalation_overlap`` section of
+    ``results/bench/BENCH_engine.json``.
+    """
+    import jax
+
+    gs = groups(quick, pairs_per_group=3)
+    pairs = _flat_pairs(gs, max_pairs=36)
+
+    def make(overlap: bool) -> GedEngine:
+        eng = _engine(backend="auto", batch_size=8, overlap=overlap,
+                      max_in_flight=4)
+        # shrink the ladder so rung 0 leaves survivors and the host rung
+        # actually engages on paper-scale pairs
+        eng._backend.scheduler.rungs = ((8, 1, 4), (256, 4, 128))
+        return eng
+
+    rows, outcomes = [], {}
+    for mode in ("sequential", "overlapped"):
+        overlap = mode == "overlapped"
+        make(overlap).compute(pairs)                   # compile warm-up
+        eng = make(overlap)
+        outs, dt = timed(eng.compute, pairs)
+        outcomes[mode] = [(o.ged, o.certified) for o in outs]
+        s = eng.stats
+        rows.append({
+            "mode": mode,
+            "devices": jax.device_count(),
+            "pairs": len(pairs),
+            "pairs_per_s": len(pairs) / dt,
+            "wall_s": dt,
+            "escalated": s["escalated"],
+            "host_solved": s["host_solved"],
+            "dispatches": s["dispatches"],
+            "overlap_saved_s": s["overlap_saved_s"],
+            "certified_frac": float(np.mean([o.certified for o in outs])),
+        })
+    assert outcomes["sequential"] == outcomes["overlapped"], \
+        "overlapped rung execution changed an answer"
+    assert all(c for _, c in outcomes["overlapped"]), \
+        "auto must certify every answer"
+    print_table("Auto escalation: sequential vs overlapped rungs", rows,
+                ["mode", "pairs", "pairs_per_s", "wall_s", "escalated",
+                 "host_solved", "overlap_saved_s", "certified_frac"])
+    record_section("BENCH_engine", "escalation_overlap", rows)
     return rows
 
 
 ALL = (engine_agreement_and_throughput, engine_verification,
        engine_bound_ablation, engine_sweeps_ablation,
-       engine_backend_throughput, kernel_validation)
+       engine_backend_throughput, engine_escalation_overlap,
+       kernel_validation)
 
 
 def scheduler_cost_model(quick=True) -> List[Dict]:

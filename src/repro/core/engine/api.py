@@ -61,18 +61,22 @@ def _run_batch(qv, gv, qa, ga, order, n, taus, cfg: EngineConfig,
     return jax.vmap(one)(qv, gv, qa, ga, order, n, taus)
 
 
-def run_packed(packed: GraphPairTensors, taus, cfg: EngineConfig,
-               verification: bool) -> Dict[str, np.ndarray]:
-    """One engine invocation over a packed batch; numpy result dict.
+def dispatch_packed(packed: GraphPairTensors, taus, cfg: EngineConfig,
+                    verification: bool) -> Dict[str, jax.Array]:
+    """Enqueue one engine invocation; return un-materialised device arrays.
 
     The raw compute step under :mod:`repro.ged.exec` — no deprecation
-    shimming, no rounding policy, just pack-in / arrays-out.
+    shimming, no rounding policy, just pack-in / futures-out.  JAX
+    dispatches asynchronously: this returns as soon as the computation is
+    queued on the device, with every value still a ``jax.Array`` future.
+    ``repro.ged.exec.PendingBatch`` wraps the dict (blocking ``result()``
+    converts to numpy); the overlapped ``auto`` scheduler in
+    :mod:`repro.ged.backends` does useful work before reading the numbers.
     """
     args = pair_tuple(packed)
-    out = _run_batch(*args, jnp.asarray(np.asarray(taus, dtype=np.float32)),
-                     cfg, bool(verification), packed.n_vlabels,
-                     packed.n_elabels)
-    return {k: np.asarray(v) for k, v in out.items()}
+    return _run_batch(*args, jnp.asarray(np.asarray(taus, dtype=np.float32)),
+                      cfg, bool(verification), packed.n_vlabels,
+                      packed.n_elabels)
 
 
 def ged_batch(pairs: GraphPairTensors, cfg: EngineConfig = EngineConfig()

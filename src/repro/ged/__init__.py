@@ -9,18 +9,25 @@ a single :class:`GedOutcome` result schema.
 Policies ride on the executor layer (:mod:`repro.ged.exec`): an
 :class:`Executor` owns device placement, compile caching, packing and
 unpacking; :class:`ShardedExecutor` ``shard_map``-s the search over the
-device mesh; and an engine-level :class:`ResultCache` answers duplicate
-pairs without re-execution.
+device mesh; :class:`PendingBatch` is the async-dispatch future the
+overlapped ``auto`` escalation scheduler rides; and an engine-level
+:class:`ResultCache` answers duplicate pairs without re-execution.
 
 The layers underneath (``repro.core.exact``, ``repro.core.engine``,
 ``repro.serving``) remain importable, but new code — and all future
 sharding/caching/async work — should come through this door.
+
+>>> from repro import ged
+>>> [o.ged for o in ged.compute([(([0], []), ([1], []))],
+...                             backend="exact")]
+[1.0]
 """
 
 from repro.ged.api import GedEngine, compute, verify
 from repro.ged.backends import (available_backends, make_backend,
                                 register_backend)
-from repro.ged.exec import Executor, ResultCache, ShardedExecutor
+from repro.ged.exec import (Executor, PendingBatch, ResultCache,
+                            ShardedExecutor)
 from repro.ged.plan import as_graph, build_plan, slot_bucket
 from repro.ged.results import GedOutcome
 
@@ -37,5 +44,6 @@ __all__ = [
     "slot_bucket",
     "Executor",
     "ShardedExecutor",
+    "PendingBatch",
     "ResultCache",
 ]

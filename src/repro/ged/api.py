@@ -55,8 +55,18 @@ class GedEngine:
         static shapes — and hence its compilations — are stable across
         calls.
     batch_size : scheduler batch size (``auto`` backend only).
-    mesh : device mesh for the ``"sharded"`` backend (default: a 1-D mesh
-        over every local device).  Ignored by single-device backends.
+    mesh : device mesh for the ``"sharded"`` and ``"auto"`` backends
+        (``"sharded"`` defaults to a 1-D mesh over every local device;
+        ``"auto"`` runs single-device unless a mesh is given, in which
+        case every escalation rung's batches are ``shard_map``-ed over
+        it).  Ignored by the other backends.
+    overlap : overlapped rung execution (``auto`` backend only, default
+        True): batches dispatch asynchronously, decided pairs drain while
+        the next rung is in flight, and host-solver pairs run behind
+        device work.  ``overlap=False`` is the strictly sequential rung
+        loop.  Outcomes are identical either way.
+    max_in_flight : how many rung buckets may be dispatched but not yet
+        drained at once (``auto`` backend, overlap mode only).
     cache : keep an engine-level result cache (default True): duplicate
         pairs — within one batch or across calls — are answered from the
         cache instead of re-executing.  ``cache_size`` bounds it (LRU).
@@ -65,6 +75,17 @@ class GedEngine:
     :class:`EngineConfig` defaults.  ``use_kernel`` is implied by the
     ``"jax"``/``"sharded"`` (False) and ``"pallas"`` (True) backend names —
     passing a contradicting value there raises.
+
+    Examples
+    --------
+    >>> from repro import ged
+    >>> q = ([0, 1], [(0, 1, 1)])           # (vlabels, edges) adapter form
+    >>> g = ([0, 2], [(0, 1, 1)])
+    >>> eng = ged.GedEngine("exact")
+    >>> [o.ged for o in eng.compute([(q, g)])]
+    [1.0]
+    >>> [o.similar for o in eng.verify([(q, g)], tau=1.0)]
+    [True]
     """
 
     def __init__(self, backend: str = "auto", *,
@@ -72,6 +93,8 @@ class GedEngine:
                  vocab: Optional[Vocab] = None,
                  batch_size: int = 256,
                  mesh=None,
+                 overlap: bool = True,
+                 max_in_flight: int = 4,
                  cache: bool = True,
                  cache_size: int = 4096,
                  config: Optional[EngineConfig] = None,
@@ -86,8 +109,9 @@ class GedEngine:
         self.slots = slots
         self.vocab = vocab
         self._cache = ResultCache(cache_size) if cache else None
-        self._backend: Backend = make_backend(backend, batch_size=batch_size,
-                                              mesh=mesh)
+        self._backend: Backend = make_backend(
+            backend, batch_size=batch_size, mesh=mesh, overlap=overlap,
+            max_in_flight=max_in_flight)
         self.backend = self._backend.name
         # "jax" means pure-jnp and "pallas" means kernels; default the flag
         # from the backend name and refuse a contradicting user setting.
@@ -107,7 +131,14 @@ class GedEngine:
     # ------------------------------------------------------------ batch
 
     def compute(self, pairs, **config_overrides) -> List[GedOutcome]:
-        """Exact-with-certificate GED for every pair."""
+        """Exact-with-certificate GED for every pair.
+
+        >>> from repro import ged
+        >>> outs = ged.GedEngine("exact").compute(
+        ...     [(([0], []), ([0], []))])           # identical graphs
+        >>> outs[0].ged, outs[0].certified
+        (0.0, True)
+        """
         return self._run(pairs, None, verification=False,
                          overrides=config_overrides)
 
@@ -115,6 +146,12 @@ class GedEngine:
         """Certified ``delta(q, g) <= tau``? for every pair.
 
         ``tau`` is a scalar (broadcast) or one threshold per pair.
+
+        >>> from repro import ged
+        >>> pair = (([0], []), ([1], []))           # distance 1
+        >>> [o.similar for o in ged.GedEngine("exact").verify(
+        ...     [pair, pair], tau=[0.5, 1.5])]
+        [False, True]
         """
         return self._run(pairs, tau, verification=True,
                          overrides=config_overrides)
@@ -124,12 +161,27 @@ class GedEngine:
     def submit(self, q, g, tau: Optional[float] = None) -> int:
         """Enqueue one pair (verification when ``tau`` is given, otherwise
         computation); returns its ticket — the index into ``flush()``'s
-        result list."""
+        result list.
+
+        >>> from repro import ged
+        >>> eng = ged.GedEngine("exact")
+        >>> eng.submit(([0], []), ([1], []))        # computation
+        0
+        >>> eng.submit(([0], []), ([0], []), tau=0.5)   # verification
+        1
+        >>> [(o.ged, o.similar) for o in eng.flush()]
+        [(1.0, None), (None, True)]
+        """
         self._pending.append((q, g, None if tau is None else float(tau)))
         return len(self._pending) - 1
 
     def flush(self) -> List[GedOutcome]:
-        """Answer every submitted pair, in submission order."""
+        """Answer every submitted pair, in submission order.
+
+        Mixed computation/verification submissions come back as one list
+        aligned with the tickets :meth:`submit` returned (see the example
+        there); a drained engine flushes to ``[]``.
+        """
         pending, self._pending = self._pending, []
         if not pending:
             return []
@@ -153,12 +205,32 @@ class GedEngine:
 
     @property
     def batch_multiple(self) -> int:
-        """Shard count every batch is padded to (1 on a single device)."""
+        """Shard count every batch is padded to (1 on a single device).
+
+        >>> from repro import ged
+        >>> ged.GedEngine("jax").batch_multiple
+        1
+        """
         return getattr(self._backend, "batch_multiple", 1)
 
     @property
     def stats(self) -> Dict[str, float]:
-        """Backend + executor counters plus cache hit/miss totals."""
+        """Backend + executor counters plus cache hit/miss totals.
+
+        Per backend: the ``auto`` pipeline reports ``pairs`` /
+        ``escalated`` / ``host_solved`` / ``batches`` / ``dispatches``,
+        per-rung survivor counts (``survivors_rung_0``, ...) and
+        ``overlap_saved_s`` — device seconds hidden behind host-solver
+        and drain work by overlapped rung execution.  Every engine adds
+        ``executor_*``, ``compile_cache_*`` and ``result_cache_*``
+        counters where applicable.
+
+        >>> from repro import ged
+        >>> eng = ged.GedEngine("exact")
+        >>> _ = eng.compute([(([0], []), ([1], []))])
+        >>> eng.stats["result_cache_misses"]
+        1
+        """
         out: Dict[str, float] = dict(getattr(self._backend, "stats", {}))
         executor = getattr(self._backend, "executor", None)
         if executor is not None:
@@ -245,11 +317,22 @@ def compute(pairs, backend: str = "auto", **options) -> List[GedOutcome]:
     Compiled executables persist in the process-wide jit cache, so repeated
     module-level calls stay cheap; hold a :class:`GedEngine` to accumulate
     stats or stream with ``submit``/``flush``.
+
+    >>> from repro import ged
+    >>> [o.ged for o in ged.compute([(([0], []), ([1], []))],
+    ...                             backend="exact")]
+    [1.0]
     """
     return GedEngine(backend, **options).compute(pairs)
 
 
 def verify(pairs, tau: Taus, backend: str = "auto",
            **options) -> List[GedOutcome]:
-    """One-shot :meth:`GedEngine.verify` with a throwaway engine."""
+    """One-shot :meth:`GedEngine.verify` with a throwaway engine.
+
+    >>> from repro import ged
+    >>> [o.similar for o in ged.verify([(([0], []), ([1], []))], tau=2.0,
+    ...                                backend="exact")]
+    [True]
+    """
     return GedEngine(backend, **options).verify(pairs, tau)

@@ -18,15 +18,21 @@ policy composes with any placement:
   over the device mesh, buckets padded to shard multiples.
 * ``"auto"``    — the production pipeline: difficulty prediction, LPT
   batch packing, escalation through growing engine rungs, host-solver
-  final rung.  Every answer it returns is certified.
+  final rung.  Every answer it returns is certified.  Rungs execute
+  *overlapped* by default (async dispatch; while rung *k* is in flight,
+  decided pairs drain into results, survivors re-bucket for rung *k+1*,
+  and host-solver pairs run behind the device work), and the policy rides
+  any executor — ``GedEngine(backend="auto", mesh=...)`` runs every rung
+  ``shard_map``-ed over the mesh.
 
-New backends (async, remote, ...) register with :func:`register_backend`
-and become constructible via ``GedEngine(backend="name")`` with no facade
-changes.
+New backends (remote, multi-host, ...) register with
+:func:`register_backend` and become constructible via
+``GedEngine(backend="name")`` with no facade changes.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Protocol
@@ -36,14 +42,26 @@ import numpy as np
 from repro.core.engine.search import EngineConfig
 from repro.core.exact.search import ged as exact_ged
 from repro.core.exact.search import ged_verify
-from repro.ged.exec import (Executor, ShardedExecutor, engine_outcome)
-from repro.ged.plan import Plan, pad_tail, slot_bucket
+from repro.ged.exec import (Executor, PendingBatch, ShardedExecutor,
+                            engine_outcome)
+from repro.ged.plan import Bucket, Plan
 from repro.ged.results import GedOutcome
-from repro.runtime.scheduler import GedScheduler, difficulty
+from repro.runtime.scheduler import Batch, GedScheduler, difficulty
 
 
 class Backend(Protocol):
-    """What the facade requires of an execution-policy backend."""
+    """What the facade requires of an execution-policy backend.
+
+    A minimal conforming implementation (see
+    :func:`register_backend` to plug one in)::
+
+        class EchoBackend:
+            name = "echo"
+            kernel_default = None
+
+            def run(self, plan, taus, verification, cfg):
+                return [some_outcome(q, g) for q, g in plan.pairs]
+    """
 
     name: str
     # What ``EngineConfig.use_kernel`` must be for this backend; ``None``
@@ -61,7 +79,17 @@ class Backend(Protocol):
 # ----------------------------------------------------------- host solver
 
 class ExactBackend:
-    """Paper-faithful host solver: always certified, yields mappings."""
+    """Paper-faithful host solver: always certified, yields mappings.
+
+    >>> import numpy as np
+    >>> from repro.core.engine.search import EngineConfig
+    >>> from repro.ged.plan import build_plan
+    >>> plan = build_plan([(([0], []), ([1], []))])   # 1-vertex relabel
+    >>> out, = ExactBackend().run(plan, np.zeros(1, np.float32), False,
+    ...                           EngineConfig())
+    >>> out.ged, out.certified
+    (1.0, True)
+    """
 
     name = "exact"
     kernel_default = None  # host solver: kernels irrelevant
@@ -116,6 +144,11 @@ class EngineBackend:
     backend name (``jax``/``sharded`` -> False, ``pallas`` -> True) and
     rejects contradictions, so the flag always matches what the user asked
     for.
+
+    Example (normally reached through the facade)::
+
+        eng = ged.GedEngine("jax", pool=512)
+        outs = eng.compute(pairs)       # one jit call per shape bucket
     """
 
     name = "jax"
@@ -148,7 +181,13 @@ class EngineBackend:
 
 
 class PallasBackend(EngineBackend):
-    """Engine policy with Pallas kernels on the hot path."""
+    """Engine policy with Pallas kernels on the hot path.
+
+    Interpret mode on CPU, real kernels on TPU — same policy, same
+    outcomes as ``"jax"``::
+
+        outs = ged.GedEngine("pallas").compute(pairs)
+    """
 
     name = "pallas"
     kernel_default = True
@@ -159,7 +198,10 @@ class ShardedBackend(EngineBackend):
 
     Identical policy (and therefore identical outcomes) to ``"jax"``; only
     the placement differs.  ``mesh`` defaults to a 1-D mesh over every
-    local device.
+    local device.  Example::
+
+        mesh = jax.make_mesh((8,), ("data",))
+        outs = ged.GedEngine("sharded", mesh=mesh).verify(pairs, 4.0)
     """
 
     name = "sharded"
@@ -171,6 +213,15 @@ class ShardedBackend(EngineBackend):
 
 # ------------------------------------------------------------ escalation
 
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched rung bucket awaiting its device results."""
+    bucket: Bucket
+    rung: int
+    pending: PendingBatch
+    t_dispatch: float
+
+
 class AutoBackend:
     """Difficulty-scheduled escalation: engine rungs, then the host solver.
 
@@ -179,17 +230,50 @@ class AutoBackend:
     equalised batches, run the batched engine, and re-queue uncertified
     pairs through bigger-pool rungs down to the exact host solver — so
     every answer is certified.
+
+    Rung execution is *overlapped* by default: batches are dispatched
+    asynchronously (JAX async dispatch, up to ``max_in_flight`` at once),
+    and while rung *k* is still crunching on the device the scheduler
+    drains rung *k-1*'s finished batches — decided pairs become outcomes,
+    survivors are re-bucketed (:meth:`repro.ged.plan.Plan.subset_buckets`)
+    and queued for rung *k+1* — and chews final-rung host-solver pairs,
+    which run on the Python side and therefore hide entirely behind
+    in-flight device work.  ``overlap=False`` restores the strictly
+    sequential rung loop (the benchmark baseline).
+
+    The policy composes with any executor: the default is a local
+    single-device :class:`~repro.ged.exec.Executor`; pass ``mesh=`` (or an
+    explicit ``executor=``) to run every rung's batches ``shard_map``-ed
+    over the device mesh via :class:`~repro.ged.exec.ShardedExecutor` —
+    that is what ``GedEngine(backend="auto", mesh=...)`` constructs.
+    Outcomes are identical whatever the placement or overlap setting; only
+    the wall-clock changes.
+
+    Example::
+
+        eng = ged.GedEngine("auto", mesh=jax.make_mesh((8,), ("data",)),
+                            max_in_flight=4)
+        outs = eng.verify(pairs, tau=4.0)       # certified, mesh-sharded
+        eng.stats["overlap_saved_s"]            # device time hidden
     """
 
     name = "auto"
     kernel_default = None  # honors cfg.use_kernel on the engine rungs
 
     def __init__(self, batch_size: int = 256,
-                 executor: Optional[Executor] = None):
+                 executor: Optional[Executor] = None,
+                 mesh=None, overlap: bool = True, max_in_flight: int = 4):
+        if executor is None:
+            executor = ShardedExecutor(mesh) if mesh is not None \
+                else Executor()
         self.scheduler = GedScheduler(batch_size)
-        self.executor = executor or Executor()
+        self.executor = executor
+        self.overlap = bool(overlap)
+        self.max_in_flight = max(1, int(max_in_flight))
         self.stats: Dict[str, float] = {"pairs": 0, "escalated": 0,
-                                        "host_solved": 0, "batches": 0}
+                                        "host_solved": 0, "batches": 0,
+                                        "dispatches": 0,
+                                        "overlap_saved_s": 0.0}
 
     @property
     def cache(self):
@@ -207,62 +291,105 @@ class AutoBackend:
                  for i, (q, g) in enumerate(plan.pairs)]
         queue = self.scheduler.pack(diffs, rung=0)
         self.stats["pairs"] += len(plan.pairs)
+        host_queue: List[int] = []          # pairs awaiting the final rung
+        dispatchable: "collections.deque" = collections.deque()  # (bucket, rung)
+        inflight: "collections.deque[_InFlight]" = collections.deque()
+        last_block_end: Optional[float] = None  # end of last blocking drain
 
-        while queue:
-            batch = queue.pop(0)
-            self.stats["batches"] += 1
-            params = self.scheduler.engine_params(batch.rung)
-            if params is None:
-                # final rung: exact host solver (paper-faithful AStar+-BMa)
-                for gi in batch.indices:
-                    q, g = plan.pairs[gi]
-                    self.stats["host_solved"] += 1
-                    t0 = time.perf_counter()
-                    if verification:
-                        res = ged_verify(q, g, float(taus[gi]), bound="BMa",
-                                         strategy=cfg.strategy)
-                        results[gi] = _host_verify_outcome(
-                            res, float(taus[gi]), f"{self.name}/exact",
-                            time.perf_counter() - t0, rung=-1)
-                    else:
-                        res = exact_ged(q, g, bound="BMa",
-                                        strategy=cfg.strategy)
-                        results[gi] = _host_compute_outcome(
-                            res, f"{self.name}/exact",
-                            time.perf_counter() - t0, rung=-1)
-                continue
+        def solve_host(gi: int) -> None:
+            # final rung: exact host solver (paper-faithful AStar+-BMa)
+            q, g = plan.pairs[gi]
+            self.stats["host_solved"] += 1
+            t0 = time.perf_counter()
+            if verification:
+                res = ged_verify(q, g, float(taus[gi]), bound="BMa",
+                                 strategy=cfg.strategy)
+                results[gi] = _host_verify_outcome(
+                    res, float(taus[gi]), f"{self.name}/exact",
+                    time.perf_counter() - t0, rung=-1)
+            else:
+                res = exact_ged(q, g, bound="BMa", strategy=cfg.strategy)
+                results[gi] = _host_compute_outcome(
+                    res, f"{self.name}/exact",
+                    time.perf_counter() - t0, rung=-1)
 
-            pool, expand, max_iters = params
+        def refill() -> None:
+            # turn scheduler batches into dispatchable rung buckets:
+            # shard-aware re-bucketing groups each batch by slot bucket
+            # and pads to the executor's shard multiple, so the
+            # max_in_flight cap applies to what actually hits the device
+            while not dispatchable and queue:
+                batch = queue.pop(0)
+                self.stats["batches"] += 1
+                if self.scheduler.engine_params(batch.rung) is None:
+                    host_queue.extend(batch.indices)
+                    continue
+                for bucket in plan.subset_buckets(batch.indices,
+                                                  self.executor.pack):
+                    dispatchable.append((bucket, batch.rung))
+
+        def dispatch(bucket: Bucket, rung: int) -> None:
+            pool, expand, max_iters = self.scheduler.engine_params(rung)
             rcfg = dataclasses.replace(cfg, pool=pool, expand=expand,
                                        max_iters=max_iters)
-            sub = [plan.pairs[gi] for gi in batch.indices]
-            slots = plan.fixed_slots or slot_bucket(
-                max(max(q.n, g.n) for q, g in sub))
-            packed, _ = self.executor.pack(sub, slots, plan.vocab)
-            sub_taus = pad_tail(
-                np.asarray([taus[gi] for gi in batch.indices],
-                           dtype=np.float32), packed.batch)
-            t0 = time.perf_counter()
-            out = self.executor.run_packed(packed, sub_taus, rcfg,
-                                           verification, real=len(sub))
+            self.stats["dispatches"] += 1
+            pending = self.executor.run_packed_async(
+                bucket.packed, bucket.pad_values(taus), rcfg,
+                verification, real=bucket.real)
+            item = _InFlight(bucket, rung, pending, time.perf_counter())
+            if self.overlap:
+                inflight.append(item)
+            else:
+                drain(item)             # sequential baseline: block now
+
+        def drain(item: _InFlight) -> None:
+            nonlocal last_block_end
+            t_drain = time.perf_counter()
+            out = item.pending.result()     # blocks until the batch lands
+            now = time.perf_counter()
             # per-batch wall, not cumulative-since-run-start: a pair's
             # reported wall_s is the cost of the batch that answered it.
-            wall = time.perf_counter() - t0
-
-            uncertified = []
-            for bi, gi in enumerate(batch.indices):
+            wall = now - item.t_dispatch
+            # overlap credit: host-side time this batch spent in flight
+            # while we were NOT blocked in another drain — windows are
+            # clipped at the previous blocking call so concurrent batches
+            # never double-count; ~0 in sequential mode.
+            start = item.t_dispatch if last_block_end is None \
+                else max(item.t_dispatch, last_block_end)
+            self.stats["overlap_saved_s"] += max(0.0, t_drain - start)
+            last_block_end = now
+            survivors = []
+            for bi, gi in enumerate(item.bucket.indices):
                 if bool(out["exact"][bi]):
                     results[gi] = engine_outcome(
-                        out, packed, bi, verification,
+                        out, item.bucket.packed, bi, verification,
                         float(taus[gi]) if verification else None,
-                        self.name, wall, rung=batch.rung)
+                        self.name, wall, rung=item.rung)
                 else:
-                    uncertified.append(bi)
-            if uncertified:
-                self.stats["escalated"] += len(uncertified)
-                nxt = self.scheduler.escalate(batch, uncertified)
+                    survivors.append(bi)
+            skey = f"survivors_rung_{item.rung}"
+            self.stats[skey] = self.stats.get(skey, 0) + len(survivors)
+            if survivors:
+                self.stats["escalated"] += len(survivors)
+                nxt = self.scheduler.escalate(
+                    Batch(list(item.bucket.indices), 0.0, item.rung),
+                    survivors)
                 if nxt is not None:
                     queue.append(nxt)
+
+        while queue or dispatchable or inflight or host_queue:
+            refill()
+            # keep the device fed: dispatch while there is work and room
+            while dispatchable and len(inflight) < self.max_in_flight:
+                dispatch(*dispatchable.popleft())
+                refill()
+            if inflight:
+                # overlap: host-solve while the oldest batch is in flight
+                while host_queue and not inflight[0].pending.ready():
+                    solve_host(host_queue.pop(0))
+                drain(inflight.popleft())
+            elif host_queue:
+                solve_host(host_queue.pop(0))
         return results  # type: ignore[return-value]
 
 
@@ -276,15 +403,40 @@ def register_backend(name: str, factory: Callable[..., Backend]) -> None:
 
     ``factory`` is called with keyword options the backend understands
     (unknown ones are not passed — see :func:`make_backend`).
+
+    >>> class NullBackend:
+    ...     name = "null"
+    ...     kernel_default = None
+    ...     def run(self, plan, taus, verification, cfg): return []
+    >>> register_backend("null", NullBackend)
+    >>> "null" in available_backends()
+    True
+    >>> del _REGISTRY["null"]                  # tidy up the example
     """
     _REGISTRY[name] = factory
 
 
 def available_backends() -> tuple:
+    """Sorted names ``GedEngine(backend=...)`` accepts right now.
+
+    >>> available_backends()
+    ('auto', 'exact', 'jax', 'pallas', 'sharded')
+    """
     return tuple(sorted(_REGISTRY))
 
 
 def make_backend(name: str, **options) -> Backend:
+    """Construct a registered backend, dropping options it doesn't take.
+
+    This is what lets ``GedEngine`` pass every knob (``batch_size``,
+    ``mesh``, ``overlap``, ...) to every backend: factories only receive
+    the keywords their signature names (unless they take ``**kwargs``).
+
+    >>> make_backend("exact").name
+    'exact'
+    >>> make_backend("exact", batch_size=64).name   # ignored, not an error
+    'exact'
+    """
     try:
         factory = _REGISTRY[name]
     except KeyError:

@@ -14,13 +14,17 @@ a packed bucket actually reaches silicon lives here:
   sort-based ``top_k_sorted`` path keeps the pair batch sharded (the
   ``lax.top_k`` custom-call would all-gather it — see
   ``repro/parallel/ops.py``).
+* :class:`PendingBatch` — the future returned by
+  :meth:`Executor.run_packed_async`: a dispatched-but-not-yet-drained
+  engine invocation, riding JAX's async dispatch.  The overlapped ``auto``
+  escalation scheduler keeps several in flight and drains them as their
+  device work lands.
 * :class:`ResultCache` — engine-level outcome cache keyed on canonical
   pair digests (label-vocab-independent, tau-aware for verification) that
   :class:`repro.ged.GedEngine` consults before any executor runs.
 
 Policy and placement compose freely: any backend policy runs unchanged on
-any executor, which is what future async / remote / multi-host work hangs
-off.
+any executor, which is what async / remote / multi-host work hangs off.
 """
 
 from __future__ import annotations
@@ -41,13 +45,64 @@ from repro.ged.results import GedOutcome, engine_mapping
 
 # ---------------------------------------------------------------- executors
 
+class PendingBatch:
+    """One dispatched-but-not-yet-drained engine invocation.
+
+    Wraps the dict of ``jax.Array`` futures an executor's dispatch step
+    produced.  Because JAX dispatches asynchronously, the device may still
+    be crunching when a ``PendingBatch`` is handed out — :meth:`ready`
+    polls without blocking, :meth:`result` blocks once and caches the
+    numpy conversion.  The overlapped ``auto`` scheduler keeps a small
+    queue of these in flight and does host-solver work while they cook.
+
+    Plain numpy inputs (no ``is_ready`` method) count as always ready:
+
+    >>> import numpy as np
+    >>> p = PendingBatch({"ged": np.zeros(2)})
+    >>> p.ready()
+    True
+    >>> p.result()["ged"]
+    array([0., 0.])
+    """
+
+    def __init__(self, arrays):
+        self._arrays = arrays
+        self._result: Optional[Dict[str, np.ndarray]] = None
+
+    def ready(self) -> bool:
+        """True when every output has landed (never blocks)."""
+        if self._result is not None:
+            return True
+        for v in self._arrays.values():
+            is_ready = getattr(v, "is_ready", None)
+            if is_ready is not None and not is_ready():
+                return False
+        return True
+
+    def result(self) -> Dict[str, np.ndarray]:
+        """Block until the batch lands; numpy result dict (cached)."""
+        if self._result is None:
+            self._result = {k: np.asarray(v)
+                            for k, v in self._arrays.items()}
+            self._arrays = None
+        return self._result
+
+
 class Executor:
     """Runs packed buckets on the default device.
 
     Owns the things backends used to hand-roll: the compile-cache mirror,
     batch-shape policy (``batch_multiple``), packing, and invocation
     counters (``stats``) — so a policy layer above never touches jit, jax
-    arrays, or device placement.
+    arrays, or device placement.  Subclasses override :meth:`_dispatch`
+    (and usually ``batch_multiple``) only; the sync/async entry points and
+    the bookkeeping are shared.
+
+    >>> ex = Executor()
+    >>> ex.batch_multiple
+    1
+    >>> sorted(ex.stats)
+    ['calls', 'pairs']
     """
 
     name = "local"
@@ -62,25 +117,60 @@ class Executor:
         return 1
 
     def pack(self, pairs, slots: int, vocab: Optional[Vocab]):
-        """Pack ``pairs`` with this executor's batch-shape policy."""
+        """Pack ``pairs`` with this executor's batch-shape policy.
+
+        Returns ``(tensors, real_count)`` with the batch dimension padded
+        to a power of two rounded up to :attr:`batch_multiple`::
+
+            packed, real = executor.pack(pairs, slots=8, vocab=plan.vocab)
+        """
         return pack_bucket(pairs, slots, vocab, self.batch_multiple)
 
-    def run_packed(self, packed, taus: np.ndarray, cfg: EngineConfig,
-                   verification: bool,
-                   real: Optional[int] = None) -> Dict[str, np.ndarray]:
-        """One engine invocation over a packed bucket; numpy result dict.
+    def run_packed_async(self, packed, taus: np.ndarray, cfg: EngineConfig,
+                         verification: bool,
+                         real: Optional[int] = None) -> PendingBatch:
+        """Dispatch one engine invocation without waiting for the result.
 
-        ``real`` — pairs before batch padding, for the ``pairs`` counter
-        (defaults to the padded batch when the caller doesn't know)."""
+        Returns a :class:`PendingBatch` immediately — JAX queues the device
+        work and hands back array futures — so callers can dispatch rung
+        *k+1* or solve host pairs while rung *k* is in flight.  ``real`` —
+        pairs before batch padding, for the ``pairs`` counter (defaults to
+        the padded batch when the caller doesn't know).
+
+        Example (the overlapped ``auto`` scheduler's inner loop)::
+
+            pending = executor.run_packed_async(packed, taus, cfg, False)
+            do_host_work_while(not pending.ready())
+            out = pending.result()          # numpy dict, blocks if needed
+        """
         self._check_batch(packed)
         self.cache.record(packed, cfg, verification)
         self.stats["calls"] += 1
         self.stats["pairs"] += packed.batch if real is None else int(real)
-        return self._invoke(packed, taus, cfg, verification)
+        return PendingBatch(self._dispatch(packed, taus, cfg, verification))
+
+    def run_packed(self, packed, taus: np.ndarray, cfg: EngineConfig,
+                   verification: bool,
+                   real: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """One blocking engine invocation over a packed bucket; numpy dict.
+
+        Sugar for :meth:`run_packed_async` + :meth:`PendingBatch.result`::
+
+            out = executor.run_packed(packed, taus, cfg, verification)
+            out["ged"], out["exact"]        # per-row engine results
+        """
+        return self.run_packed_async(packed, taus, cfg, verification,
+                                     real=real).result()
 
     def run_bucket(self, bucket: Bucket, taus: np.ndarray, cfg: EngineConfig,
                    verification: bool) -> Dict[str, np.ndarray]:
-        """Run one plan bucket; ``taus`` is the plan-global per-pair array."""
+        """Run one plan bucket; ``taus`` is the plan-global per-pair array.
+
+        Example::
+
+            for bucket in plan.buckets:
+                out = executor.run_bucket(bucket, taus, cfg, verification)
+        """
         return self.run_packed(bucket.packed, bucket.pad_values(taus), cfg,
                                verification, real=bucket.real)
 
@@ -94,8 +184,9 @@ class Executor:
                 f"{mult} shards; pack with batch_multiple={mult} "
                 "(GedEngine does this automatically)")
 
-    def _invoke(self, packed, taus, cfg, verification):
-        return engine_api.run_packed(packed, taus, cfg, verification)
+    def _dispatch(self, packed, taus, cfg, verification):
+        """Enqueue the device work; dict of un-materialised jax arrays."""
+        return engine_api.dispatch_packed(packed, taus, cfg, verification)
 
 
 class ShardedExecutor(Executor):
@@ -106,6 +197,16 @@ class ShardedExecutor(Executor):
     axes come from the ``"pairs"`` row of
     :func:`repro.parallel.sharding.default_rules` (``pod`` + ``data``),
     matching how the serving dry-run places pair batches.
+
+    Any policy backend composes with it — ``GedEngine(backend="sharded")``
+    is the vmap policy on this executor, ``GedEngine(backend="auto",
+    mesh=...)`` the escalation policy.  Example::
+
+        mesh = jax.make_mesh((8,), ("data",))
+        eng = ged.GedEngine("sharded", mesh=mesh)   # batches padded to 8
+
+    >>> ShardedExecutor().batch_multiple >= 1      # local device count
+    True
     """
 
     name = "sharded"
@@ -127,7 +228,7 @@ class ShardedExecutor(Executor):
         from repro.parallel.sharding import default_rules
         return default_rules(self.mesh).mesh_size(self.axes)
 
-    def _invoke(self, packed, taus, cfg, verification):
+    def _dispatch(self, packed, taus, cfg, verification):
         import jax
         import jax.numpy as jnp
 
@@ -148,8 +249,7 @@ class ShardedExecutor(Executor):
                                    check=False))
             self._fns[key] = fn
         args = engine_api.pair_tuple(packed)
-        out = fn(*args, jnp.asarray(np.asarray(taus, dtype=np.float32)))
-        return {k: np.asarray(v) for k, v in out.items()}
+        return fn(*args, jnp.asarray(np.asarray(taus, dtype=np.float32)))
 
 
 # ----------------------------------------------------------- result unpack
@@ -157,7 +257,17 @@ class ShardedExecutor(Executor):
 def engine_outcome(out: Dict[str, np.ndarray], packed, bi: int,
                    verification: bool, tau: Optional[float], backend: str,
                    wall_s: float, rung: int) -> GedOutcome:
-    """One :class:`GedOutcome` from row ``bi`` of an executor result dict."""
+    """One :class:`GedOutcome` from row ``bi`` of an executor result dict.
+
+    The unpack half of the executor contract — backends call it once per
+    answered pair::
+
+        out = executor.run_bucket(bucket, taus, cfg, verification)
+        for bi, gi in enumerate(bucket.indices):
+            results[gi] = engine_outcome(out, bucket.packed, bi,
+                                         verification, tau, "jax",
+                                         wall_s, rung=0)
+    """
     certified = bool(out["exact"][bi])
     n = int(packed.n[bi])
     mapping = engine_mapping(packed.order[bi], out["best_img"][bi], n)
@@ -190,6 +300,13 @@ def graph_digest(g: Graph) -> bytes:
     equality means *identical* graphs — mappings in cached outcomes stay
     index-compatible — and the digest never changes with whichever other
     pairs happened to share a batch.
+
+    >>> from repro.ged.plan import as_graph
+    >>> g = as_graph(([0, 1], [(0, 1, 1)]))
+    >>> len(graph_digest(g))
+    16
+    >>> graph_digest(g) == graph_digest(as_graph(([0, 1], [(0, 1, 1)])))
+    True
     """
     h = hashlib.blake2b(digest_size=16)
     h.update(np.int64(g.n).tobytes())
@@ -200,7 +317,17 @@ def graph_digest(g: Graph) -> bytes:
 
 def pair_key(q: Graph, g: Graph, verification: bool, tau: Optional[float],
              cfg: EngineConfig, backend: str) -> tuple:
-    """Cache key for one query: pair digests + mode (tau-aware) + config."""
+    """Cache key for one query: pair digests + mode (tau-aware) + config.
+
+    The same pair in a different mode (or at a different tau) keys
+    differently, so a verification answer can never shadow a computation:
+
+    >>> from repro.ged.plan import as_graph
+    >>> q = as_graph(([0], [])); g = as_graph(([1], []))
+    >>> pair_key(q, g, True, 2.0, None, "jax") == \\
+    ...     pair_key(q, g, False, None, None, "jax")
+    False
+    """
     return (graph_digest(q), graph_digest(g), bool(verification),
             None if tau is None else float(tau), cfg, backend)
 
@@ -208,7 +335,16 @@ def pair_key(q: Graph, g: Graph, verification: bool, tau: Optional[float],
 def detached(outcome: GedOutcome, stats: Dict[str, float]) -> GedOutcome:
     """An independent copy of ``outcome`` — own stats dict, own mapping
     array — with ``stats`` swapped in.  Callers may mutate what they are
-    handed without corrupting a cached entry (or a duplicate's answer)."""
+    handed without corrupting a cached entry (or a duplicate's answer).
+
+    >>> from repro.ged.results import GedOutcome
+    >>> a = GedOutcome(ged=1.0, similar=None, certified=True,
+    ...                lower_bound=1.0, upper_bound=1.0, mapping=None,
+    ...                backend="exact", wall_s=0.0, stats={"rung": 0})
+    >>> b = detached(a, {**a.stats, "cached": True})
+    >>> b.stats["cached"], "cached" in a.stats
+    (True, False)
+    """
     mapping = None if outcome.mapping is None else np.array(outcome.mapping)
     return dataclasses.replace(outcome, mapping=mapping, stats=stats)
 
@@ -219,6 +355,18 @@ class ResultCache:
     Sits in front of every executor (``GedEngine`` consults it before
     planning), so duplicate pairs — across calls or within one batch —
     never re-execute, whatever the backend.
+
+    >>> from repro.ged.results import GedOutcome
+    >>> cache = ResultCache(maxsize=2)
+    >>> cache.get(("some", "key")) is None     # miss
+    True
+    >>> out = GedOutcome(ged=2.0, similar=None, certified=True,
+    ...                  lower_bound=2.0, upper_bound=2.0, mapping=None,
+    ...                  backend="jax", wall_s=0.01)
+    >>> cache.put(("some", "key"), out)
+    >>> hit = cache.get(("some", "key"))
+    >>> hit.ged, hit.stats["cached"], (cache.hits, cache.misses)
+    (2.0, True, (1, 1))
     """
 
     def __init__(self, maxsize: int = 4096):

@@ -46,6 +46,12 @@ def as_graph(obj) -> Graph:
       "adj": matrix}`` dicts;
     * adjacency dict ``{node: (vlabel, [(neighbor, elabel), ...])}`` with
       arbitrary hashable node ids (indexed in sorted order).
+
+    >>> g = as_graph(([0, 1, 1], [(0, 1, 1), (1, 2, 2)]))
+    >>> g.n, g.m
+    (3, 2)
+    >>> as_graph({"a": (0, [("b", 1)]), "b": (1, [("a", 1)])}).n
+    2
     """
     if isinstance(obj, Graph):
         return obj
@@ -91,7 +97,11 @@ def _pow2(n: int) -> int:
 
 
 def slot_bucket(n: int, min_slots: int = MIN_SLOTS) -> int:
-    """Power-of-two slot count for a padded pair of ``n`` vertices."""
+    """Power-of-two slot count for a padded pair of ``n`` vertices.
+
+    >>> [slot_bucket(n) for n in (1, 4, 5, 9)]
+    [4, 4, 8, 16]
+    """
     return max(min_slots, _pow2(max(n, 1)))
 
 
@@ -106,7 +116,13 @@ def pad_tail(values: np.ndarray, batch: int) -> np.ndarray:
 def padded_batch(real: int, batch_multiple: int = 1) -> int:
     """Batch size after padding: the power of two >= ``real``, rounded up to
     a multiple of ``batch_multiple`` (the executor's shard count, so every
-    device mesh shard receives an equal slice)."""
+    device mesh shard receives an equal slice).
+
+    >>> [padded_batch(r) for r in (1, 3, 5)]
+    [1, 4, 8]
+    >>> padded_batch(9, batch_multiple=8)
+    16
+    """
     b = _pow2(real)
     if b % batch_multiple:
         b = -(-b // batch_multiple) * batch_multiple
@@ -146,6 +162,38 @@ class Plan:
     buckets: List[Bucket]
     vocab: Vocab
     fixed_slots: Optional[int]  # user-pinned slot count (disables bucketing)
+
+    def subset_buckets(self, indices: Sequence[int], packer) -> List[Bucket]:
+        """Incrementally re-bucket a subset of this plan's pairs.
+
+        The overlapped ``auto`` scheduler calls this between escalation
+        rungs: survivors of rung *k* are regrouped by slot bucket
+        (honouring ``fixed_slots``) and re-packed with the plan's shared
+        vocab, so rung *k+1* batches keep canonical shapes — and shard
+        multiples — without re-ingesting or re-planning the whole
+        workload.  ``packer`` is :meth:`repro.ged.exec.Executor.pack`
+        shaped: ``packer(pairs, slots, vocab) -> (tensors, real)``, which
+        is how the executor's ``batch_multiple`` reaches the padding.
+
+        Example (survivors 0 and 3 re-queued for the next rung)::
+
+            for bucket in plan.subset_buckets([0, 3], executor.pack):
+                pending = executor.run_packed_async(
+                    bucket.packed, bucket.pad_values(taus), rcfg,
+                    verification, real=bucket.real)
+        """
+        by_slots: Dict[int, List[int]] = {}
+        for gi in indices:
+            q, g = self.pairs[gi]
+            s = self.fixed_slots or slot_bucket(max(q.n, g.n))
+            by_slots.setdefault(s, []).append(gi)
+        out = []
+        for s in sorted(by_slots):
+            idxs = by_slots[s]
+            packed, real = packer([self.pairs[i] for i in idxs], s,
+                                  self.vocab)
+            out.append(Bucket(s, idxs, packed, real))
+        return out
 
 
 def build_plan(

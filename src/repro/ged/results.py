@@ -35,6 +35,14 @@ class GedOutcome:
       escalated all the way to the host solver).
     * ``stats`` — backend-specific diagnostics (engine iterations/expanded
       states, escalation rung, ...).  Informational only.
+
+    >>> o = GedOutcome(ged=2.0, similar=None, certified=True,
+    ...                lower_bound=2.0, upper_bound=2.0, mapping=None,
+    ...                backend="auto", wall_s=0.01, stats={"rung": 1})
+    >>> o.certified, o.rung
+    (True, 1)
+    >>> o.lower_bound <= o.ged <= o.upper_bound
+    True
     """
 
     ged: Optional[float]
@@ -61,6 +69,12 @@ def engine_mapping(order_row: np.ndarray, img_row: np.ndarray,
     ``img_row[pos]`` is the g-slot assigned to q vertex ``order_row[pos]``.
     Returns the first ``n`` entries (the padded pair size) or ``None`` when
     the engine produced no full mapping.
+
+    >>> import numpy as np
+    >>> engine_mapping(np.array([1, 0, 2]), np.array([2, 0, -1]), 3)
+    array([ 0,  2, -1])
+    >>> engine_mapping(np.array([0, 1]), np.array([-1, -1]), 2) is None
+    True
     """
     if n <= 0 or np.all(img_row[:n] < 0):
         return None if n > 0 else np.zeros(0, dtype=np.int64)

@@ -7,7 +7,9 @@ The pipeline (difficulty prediction, LPT straggler packing, batched
 AStar+-hybrid engine, escalation through bigger-pool rungs, exact host
 solver as the final rung) lives in ``repro.ged.backends.AutoBackend``;
 this service is a thin request/response wrapper over
-``repro.ged.GedEngine(backend="auto")``.  Every answer it returns is
+``repro.ged.GedEngine(backend="auto")`` and therefore rides the
+overlapped (async-dispatch) rung path — pass ``mesh=`` to shard every
+rung over a device mesh, ``overlap=False`` for the sequential loop.  Every answer it returns is
 certified exact, and every answer is a ``repro.ged.GedOutcome``.
 Duplicate requests — the common case for similarity-search traffic —
 are deduplicated by the engine's result cache (tau-aware), so repeats
@@ -37,13 +39,25 @@ class GedRequest:
 
 
 class GedVerificationService:
+    """Request/response wrapper over the escalating ``auto`` engine.
+
+    Rides the overlapped (async-dispatch) rung path by default; pass
+    ``mesh=`` to run every rung's batches sharded over a device mesh, or
+    ``overlap=False`` to force the sequential rung loop.  Example::
+
+        svc = GedVerificationService(batch_size=128,
+                                     mesh=jax.make_mesh((8,), ("data",)))
+        outs = svc.verify([GedRequest(q, g, tau=4.0), ...])
+    """
+
     def __init__(self, batch_size: int = 256, slots: int = 32,
                  strategy: str = "astar", bound: str = "hybrid",
-                 use_kernel: bool = False, cache_size: int = 4096):
+                 use_kernel: bool = False, cache_size: int = 4096,
+                 mesh=None, overlap: bool = True):
         self.engine = GedEngine(
             backend="auto", slots=slots, batch_size=batch_size,
             strategy=strategy, bound=bound, use_kernel=use_kernel,
-            cache_size=cache_size)
+            cache_size=cache_size, mesh=mesh, overlap=overlap)
         # exposed for tests/tuning: mutating ``scheduler.rungs`` reshapes
         # the escalation ladder of the underlying auto backend.
         self.scheduler = self.engine._backend.scheduler

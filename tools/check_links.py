@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Offline markdown link checker for the docs suite.
+
+Validates every ``[text](target)`` link in the given markdown files /
+directories:
+
+* relative file targets must exist on disk (resolved against the file
+  containing the link);
+* ``#anchor`` fragments must match a heading in the target markdown
+  file (GitHub slug rules: lowercase, punctuation stripped, spaces to
+  hyphens);
+* external ``http(s)``/``mailto`` targets are syntax-checked only — CI
+  stays deterministic with no network.
+
+Usage::
+
+    python tools/check_links.py README.md docs
+
+Exits non-zero (listing every broken link) when anything dangles, so
+the CI job — and the tier-1 test that wraps these functions — fails
+instead of letting the docs rot silently.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List
+
+# [text](target) — target up to the first closing paren / whitespace;
+# images (![alt](src)) match too, which is what we want.
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for one heading line."""
+    text = re.sub(r"[`*~]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(path: Path) -> set:
+    slugs = set()
+    seen: dict = {}
+    in_code = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        m = HEADING.match(line)
+        if m:
+            s = slugify(m.group(1))
+            n = seen.get(s, 0)
+            seen[s] = n + 1
+            # GitHub disambiguates repeated headings with -1, -2, ...
+            slugs.add(s if n == 0 else f"{s}-{n}")
+    return slugs
+
+
+def markdown_files(args: List[str]) -> List[Path]:
+    files: List[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        else:
+            files.append(p)
+    return files
+
+
+def check_file(path: Path) -> List[str]:
+    """Broken-link descriptions for one markdown file (empty = clean)."""
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    # ignore fenced blocks and inline code spans: example syntax, not links
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    text = re.sub(r"`[^`\n]*`", "", text)
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, anchor = target.partition("#")
+        dest = path if not base else (path.parent / base).resolve()
+        if not dest.exists():
+            errors.append(f"{path}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if slugify(anchor) not in heading_slugs(dest):
+                errors.append(f"{path}: dangling anchor -> {target}")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    files = markdown_files(argv or ["README.md", "docs"])
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 2
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
