@@ -49,6 +49,7 @@ def main() -> None:
                    eval_engine.engine_sweeps_ablation,
                    eval_engine.engine_backend_throughput,
                    eval_engine.engine_escalation_overlap,
+                   eval_engine.engine_similarity_search,
                    eval_engine.scheduler_cost_model),
         "kernels": (eval_engine.kernel_validation,),
     }

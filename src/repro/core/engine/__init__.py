@@ -7,6 +7,8 @@ tensor programs (see DESIGN.md §2):
 * ``bounds``        — batched anchor-aware bound components (histogram algebra)
 * ``auction``       — Bertsekas auction with LP-dual *admissible* lower bounds
 * ``search``        — device-resident frontier search (``lax.while_loop``)
+* ``corpus``        — corpus-wide stage-0 filter bounds (label-multiset /
+  degree-sequence / size) for graph-database similarity search
 * ``api``           — deprecated ``ged_batch`` / ``verify_batch`` shims; the
   public entry point is the ``repro.ged`` facade
 """

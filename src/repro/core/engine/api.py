@@ -86,7 +86,9 @@ def ged_batch(pairs: GraphPairTensors, cfg: EngineConfig = EngineConfig()
     .. deprecated:: use ``repro.ged.GedEngine(backend="jax").compute``.
     """
     warnings.warn(
-        "ged_batch is deprecated; use repro.ged.GedEngine / repro.ged.compute",
+        "ged_batch is deprecated and will be removed in repro-ged 0.3; "
+        "use repro.ged.GedEngine / repro.ged.compute (corpus workloads: "
+        "repro.ged.GraphStore)",
         DeprecationWarning, stacklevel=2)
     args = pair_tuple(pairs)
     taus = jnp.zeros((pairs.batch,), dtype=jnp.float32)
@@ -103,7 +105,9 @@ def verify_batch(pairs: GraphPairTensors, taus: Sequence[float],
     .. deprecated:: use ``repro.ged.GedEngine(backend="jax").verify``.
     """
     warnings.warn(
-        "verify_batch is deprecated; use repro.ged.GedEngine / repro.ged.verify",
+        "verify_batch is deprecated and will be removed in repro-ged 0.3; "
+        "use repro.ged.GedEngine / repro.ged.verify (corpus workloads: "
+        "repro.ged.GraphStore.range_search)",
         DeprecationWarning, stacklevel=2)
     args = pair_tuple(pairs)
     taus = jnp.asarray(np.asarray(taus, dtype=np.float32))

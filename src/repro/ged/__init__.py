@@ -6,12 +6,19 @@ pluggable policy backends (``exact`` host solver, ``jax`` vmap engine,
 escalation pipeline), with bucketed planning for mixed-size workloads and
 a single :class:`GedOutcome` result schema.
 
+Corpus-scale similarity search goes through the same door:
+:class:`GraphStore` ingests a graph database once (shared label vocab,
+resident stage-0 feature arrays, canonical-digest dedup) and answers
+``range_search`` / ``top_k`` / ``search_batch`` queries via a staged
+filter-verify pipeline, returning ranked :class:`SearchHit` results.
+
 Policies ride on the executor layer (:mod:`repro.ged.exec`): an
 :class:`Executor` owns device placement, compile caching, packing and
 unpacking; :class:`ShardedExecutor` ``shard_map``-s the search over the
 device mesh; :class:`PendingBatch` is the async-dispatch future the
 overlapped ``auto`` escalation scheduler rides; and an engine-level
-:class:`ResultCache` answers duplicate pairs without re-execution.
+:class:`ResultCache` answers duplicate pairs without re-execution (keyed
+on exact or Weisfeiler-Leman canonical digests — see :func:`wl_digest`).
 
 The layers underneath (``repro.core.exact``, ``repro.core.engine``,
 ``repro.serving``) remain importable, but new code — and all future
@@ -27,13 +34,16 @@ from repro.ged.api import GedEngine, compute, verify
 from repro.ged.backends import (available_backends, make_backend,
                                 register_backend)
 from repro.ged.exec import (Executor, PendingBatch, ResultCache,
-                            ShardedExecutor)
+                            ShardedExecutor, graph_digest, wl_digest)
 from repro.ged.plan import as_graph, build_plan, slot_bucket
-from repro.ged.results import GedOutcome
+from repro.ged.results import GedOutcome, SearchHit
+from repro.ged.store import GraphStore
 
 __all__ = [
     "GedEngine",
     "GedOutcome",
+    "GraphStore",
+    "SearchHit",
     "compute",
     "verify",
     "register_backend",
@@ -46,4 +56,6 @@ __all__ = [
     "ShardedExecutor",
     "PendingBatch",
     "ResultCache",
+    "graph_digest",
+    "wl_digest",
 ]

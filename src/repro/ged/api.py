@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.core.engine.search import EngineConfig
 from repro.ged.backends import Backend, make_backend
-from repro.ged.exec import ResultCache, detached, pair_key
+from repro.ged.exec import DIGESTS, ResultCache, detached, pair_key
 from repro.ged.plan import Vocab, as_pairs, build_plan
 from repro.ged.results import GedOutcome
 
@@ -70,6 +70,19 @@ class GedEngine:
     cache : keep an engine-level result cache (default True): duplicate
         pairs — within one batch or across calls — are answered from the
         cache instead of re-executing.  ``cache_size`` bounds it (LRU).
+    digest : graph-hash family for the result-cache keys.  ``"exact"``
+        (default) keys on byte-identical graphs, so cached mappings stay
+        index-compatible; ``"wl"`` keys on Weisfeiler-Leman canonical
+        digests, so *isomorphic* duplicates also hit.  ``"wl"`` is a
+        deliberate precision trade for duplicate-heavy graph-DB traffic:
+        WL refinement is an incomplete isomorphism test, so WL-equivalent
+        non-isomorphic pairs (rare outside uniform-label regular graphs)
+        alias to one cache entry and the second pair is answered with the
+        first pair's distance.  Cache copies also drop their vertex
+        mappings.  :class:`repro.ged.GraphStore` gets the same hit-rate
+        win soundly instead — WL dedup confirmed by certified
+        zero-distance checks at ingest — and keeps its engine on
+        ``"exact"``.
     Remaining keyword arguments (``pool``, ``expand``, ``max_iters``,
     ``sweeps``, ``bound``, ``strategy``, ``use_kernel``) override
     :class:`EngineConfig` defaults.  ``use_kernel`` is implied by the
@@ -97,11 +110,16 @@ class GedEngine:
                  max_in_flight: int = 4,
                  cache: bool = True,
                  cache_size: int = 4096,
+                 digest: str = "exact",
                  config: Optional[EngineConfig] = None,
                  **config_overrides):
         unknown = set(config_overrides) - _CONFIG_FIELDS
         if unknown:
             raise TypeError(f"unknown GedEngine options: {sorted(unknown)}")
+        if digest not in DIGESTS:
+            raise ValueError(f"unknown digest {digest!r}; "
+                             f"expected one of {sorted(DIGESTS)}")
+        self.digest = digest
         if config is None:
             config = EngineConfig(**{"use_kernel": False, **config_overrides})
         elif config_overrides:
@@ -130,8 +148,14 @@ class GedEngine:
 
     # ------------------------------------------------------------ batch
 
-    def compute(self, pairs, **config_overrides) -> List[GedOutcome]:
+    def compute(self, pairs, vocab: Optional[Vocab] = None,
+                **config_overrides) -> List[GedOutcome]:
         """Exact-with-certificate GED for every pair.
+
+        ``vocab`` overrides the engine's label universe for this call
+        only (callers with a known corpus vocabulary — e.g.
+        :class:`repro.ged.GraphStore` — keep compile keys stable without
+        mutating shared engine state).
 
         >>> from repro import ged
         >>> outs = ged.GedEngine("exact").compute(
@@ -140,12 +164,15 @@ class GedEngine:
         (0.0, True)
         """
         return self._run(pairs, None, verification=False,
-                         overrides=config_overrides)
+                         overrides=config_overrides, vocab=vocab)
 
-    def verify(self, pairs, tau: Taus, **config_overrides) -> List[GedOutcome]:
+    def verify(self, pairs, tau: Taus, vocab: Optional[Vocab] = None,
+               **config_overrides) -> List[GedOutcome]:
         """Certified ``delta(q, g) <= tau``? for every pair.
 
-        ``tau`` is a scalar (broadcast) or one threshold per pair.
+        ``tau`` is a scalar (broadcast) or one threshold per pair;
+        ``vocab`` is a per-call label-universe override (see
+        :meth:`compute`).
 
         >>> from repro import ged
         >>> pair = (([0], []), ([1], []))           # distance 1
@@ -154,7 +181,7 @@ class GedEngine:
         [False, True]
         """
         return self._run(pairs, tau, verification=True,
-                         overrides=config_overrides)
+                         overrides=config_overrides, vocab=vocab)
 
     # -------------------------------------------------------- streaming
 
@@ -249,7 +276,8 @@ class GedEngine:
     # --------------------------------------------------------- internal
 
     def _run(self, pairs, tau: Optional[Taus], verification: bool,
-             overrides: dict) -> List[GedOutcome]:
+             overrides: dict,
+             vocab: Optional[Vocab] = None) -> List[GedOutcome]:
         unknown = set(overrides) - _CONFIG_FIELDS
         if unknown:
             raise TypeError(f"unknown engine options: {sorted(unknown)}")
@@ -279,7 +307,7 @@ class GedEngine:
                 keys[i] = pair_key(
                     q, g, verification,
                     float(taus[i]) if verification else None, cfg,
-                    self.backend)
+                    self.backend, digest=self.digest)
                 if keys[i] in seen:
                     # duplicate within this batch: runs once, answers twice
                     dup_of[i] = seen[keys[i]]
@@ -295,18 +323,31 @@ class GedEngine:
         if run_idx:
             plan = build_plan(
                 [pairs[i] for i in run_idx], slots=self.slots,
-                vocab=self.vocab, batch_multiple=self.batch_multiple)
+                vocab=vocab if vocab is not None else self.vocab,
+                batch_multiple=self.batch_multiple)
             outs = self._backend.run(plan, taus[run_idx], verification, cfg)
             for i, o in zip(run_idx, outs):
                 results[i] = o
                 if self._cache is not None:
-                    self._cache.put(keys[i], o)
+                    self._cache.put(keys[i], self._cache_view(o))
         for i, j in dup_of.items():
             # a distinct outcome per position, so mutating one entry
             # cannot leak into its duplicates (or the cache)
-            results[i] = detached(results[j],
+            results[i] = detached(self._cache_view(results[j]),
                                   {**results[j].stats, "cached": True})
         return results  # type: ignore[return-value]
+
+    def _cache_view(self, outcome: GedOutcome) -> GedOutcome:
+        """What a cache (or in-batch duplicate) may reuse of ``outcome``.
+
+        Exact digests key byte-identical graphs, so everything is
+        reusable; WL digests key isomorphism classes, so the vertex
+        mapping — index-valid only for the graph that produced it — is
+        dropped from what duplicates see.
+        """
+        if self.digest == "exact" or outcome.mapping is None:
+            return outcome
+        return dataclasses.replace(outcome, mapping=None)
 
 
 # ------------------------------------------------- module-level helpers

@@ -315,8 +315,72 @@ def graph_digest(g: Graph) -> bytes:
     return h.digest()
 
 
+def wl_digest(g: Graph, iters: int = 3) -> bytes:
+    """Isomorphism-invariant digest: Weisfeiler-Leman color refinement.
+
+    Vertex colors start from vertex labels and are refined ``iters`` times
+    with the sorted multiset of ``(edge_label, neighbor_color)`` pairs; the
+    digest hashes the *sorted* final color multiset plus an edge summary
+    (sorted ``(color, color, edge_label)`` triples) and the graph sizes —
+    every ingredient is permutation-invariant, so isomorphic graphs always
+    collide, which is exactly what a graph-DB result cache wants.
+
+    Caveat (why the exact digest stays the default for :func:`pair_key`):
+    WL refinement is not a complete isomorphism test — WL-equivalent
+    non-isomorphic graphs (a 6-cycle vs two triangles, regular graphs
+    with uniform labels) share a digest.  A consumer must therefore
+    either *confirm* a collision before trusting it
+    (:class:`repro.ged.GraphStore` runs a certified GED == 0 check per
+    candidate merge at ingest) or accept that an unconfirmed collision
+    aliases two different pairs — ``GedEngine(digest="wl")`` is that
+    opt-in trade: on WL-equivalent non-isomorphic pairs the cache can
+    return the *other* pair's distance.  Cached mappings are dropped
+    either way (index-valid only for the graph that produced them).
+
+    >>> from repro.ged.plan import as_graph
+    >>> g = as_graph(([0, 1, 2], [(0, 1, 1), (1, 2, 2)]))
+    >>> p = as_graph(([2, 1, 0], [(1, 0, 2), (2, 1, 1)]))   # relabelled copy
+    >>> wl_digest(g) == wl_digest(p)
+    True
+    >>> graph_digest(g) == graph_digest(p)
+    False
+    """
+    def h8(*parts: bytes) -> bytes:
+        hh = hashlib.blake2b(digest_size=8)
+        for p in parts:
+            hh.update(p)
+        return hh.digest()
+
+    adj = g.adj
+    colors = [h8(np.int64(int(a)).tobytes()) for a in g.vlabels]
+    for _ in range(iters):
+        colors = [
+            h8(colors[v], *(np.int64(int(adj[v, u])).tobytes() + colors[u]
+                            for u in sorted(np.nonzero(adj[v])[0].tolist(),
+                                            key=lambda u: (adj[v, u],
+                                                           colors[u]))))
+            for v in range(g.n)
+        ]
+    out = hashlib.blake2b(digest_size=16)
+    out.update(np.int64(g.n).tobytes())
+    out.update(np.int64(g.m).tobytes())
+    for c in sorted(colors):
+        out.update(c)
+    ii, jj = np.nonzero(np.triu(adj, k=1))
+    for t in sorted(
+        h8(*sorted((colors[i], colors[j])),
+           np.int64(int(adj[i, j])).tobytes())
+        for i, j in zip(ii.tolist(), jj.tolist())
+    ):
+        out.update(t)
+    return out.digest()
+
+
+DIGESTS = {"exact": graph_digest, "wl": wl_digest}
+
+
 def pair_key(q: Graph, g: Graph, verification: bool, tau: Optional[float],
-             cfg: EngineConfig, backend: str) -> tuple:
+             cfg: EngineConfig, backend: str, digest: str = "exact") -> tuple:
     """Cache key for one query: pair digests + mode (tau-aware) + config.
 
     The same pair in a different mode (or at a different tau) keys
@@ -327,8 +391,19 @@ def pair_key(q: Graph, g: Graph, verification: bool, tau: Optional[float],
     >>> pair_key(q, g, True, 2.0, None, "jax") == \\
     ...     pair_key(q, g, False, None, None, "jax")
     False
+
+    ``digest`` selects the graph-hash family: ``"exact"`` (default; equal
+    keys mean byte-identical graphs, mappings stay index-compatible) or
+    ``"wl"`` (:func:`wl_digest`; isomorphic duplicates share keys, raising
+    hit rates on graph-DB workloads — cache copies drop their mappings):
+
+    >>> p = as_graph(([1], []))                 # same graph, new object
+    >>> pair_key(q, p, False, None, None, "jax", digest="wl") == \\
+    ...     pair_key(q, g, False, None, None, "jax", digest="wl")
+    True
     """
-    return (graph_digest(q), graph_digest(g), bool(verification),
+    fn = DIGESTS[digest]
+    return (digest, fn(q), fn(g), bool(verification),
             None if tau is None else float(tau), cfg, backend)
 
 

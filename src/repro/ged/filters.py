@@ -1,0 +1,139 @@
+"""The filter half of the corpus filter-verify pipeline.
+
+:class:`FilterIndex` is what a :class:`repro.ged.GraphStore` builds at
+ingest time: corpus graphs grouped per slot bucket, their stage-0 features
+(:mod:`repro.core.engine.corpus`) packed into resident device arrays, and
+one fused scan per bucket that scores a query against the whole bucket
+with sound lower bounds — no per-pair planning, no per-pair packing.
+
+The scan composes with the executor layer the same way backends do: on a
+plain :class:`~repro.ged.exec.Executor` it is one jit call per bucket; on
+a :class:`~repro.ged.exec.ShardedExecutor` the corpus axis is
+``shard_map``-ed over the executor's mesh (bucket batches are padded to
+the shard multiple at ingest), so ``GraphStore(mesh=...)`` shards the
+filter scan exactly like it shards verification batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine.corpus import (CorpusFeatures, graph_features,
+                                      stage0_lower_bounds)
+from repro.core.exact.graph import Graph
+from repro.ged.exec import Executor, ShardedExecutor
+from repro.ged.plan import Vocab, slot_bucket
+
+
+@dataclasses.dataclass
+class FeatureBucket:
+    """One slot bucket of the corpus: ids + resident feature arrays."""
+
+    slots: int
+    ids: List[int]              # corpus positions, ingest order
+    features: CorpusFeatures    # batch padded to the executor's multiple
+    real: int                   # rows before batch padding
+
+
+class FilterIndex:
+    """Stage-0 scan over an ingested corpus.
+
+    >>> from repro.ged.plan import as_graph, graphs_vocab
+    >>> corpus = [as_graph(([0, 1], [(0, 1, 1)])), as_graph(([5], []))]
+    >>> idx = FilterIndex(corpus, list(range(2)), graphs_vocab(corpus))
+    >>> lbs = idx.scan(as_graph(([0, 1], [(0, 1, 1)])))
+    >>> float(lbs[0]), bool(lbs[1] >= 2.0)   # identical graph; far singleton
+    (0.0, True)
+    """
+
+    def __init__(self, graphs: Sequence[Graph], ids: Sequence[int],
+                 vocab: Vocab, executor: Optional[Executor] = None):
+        self.vocab = vocab
+        self.executor = executor or Executor()
+        mult = self.executor.batch_multiple
+        by_slots: Dict[int, List[int]] = {}
+        for gid in ids:
+            by_slots.setdefault(slot_bucket(graphs[gid].n), []).append(gid)
+        self.buckets: List[FeatureBucket] = []
+        for s in sorted(by_slots):
+            bids = by_slots[s]
+            feats = graph_features([graphs[i] for i in bids], vocab, width=s)
+            real = feats.batch
+            pad = -real % max(mult, 1)
+            if pad:
+                feats = CorpusFeatures(
+                    *(np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
+                      for a in (feats.vhist, feats.ehist, feats.degs,
+                                feats.n, feats.m)))
+            self.buckets.append(FeatureBucket(s, bids, feats, real))
+        # id order the scan output follows (bucket construction order)
+        self.ids: List[int] = [gid for b in self.buckets for gid in b.ids]
+        self._fns: Dict[tuple, object] = {}
+        self.stats: Dict[str, float] = {"scans": 0, "scanned": 0}
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+    # ------------------------------------------------------------- scan
+
+    def scan(self, query: Graph) -> np.ndarray:
+        """Stage-0 lower bound of ``delta(query, g)`` for every indexed id.
+
+        Returns an array aligned with :attr:`ids` (bucket construction
+        order).  One fused device call per bucket; the degree width is
+        the max of the bucket's slots and the query's slot bucket, so
+        repeated queries reuse compilations.
+        """
+        self.stats["scans"] += 1
+        parts = []
+        for b in self.buckets:
+            width = max(b.slots, slot_bucket(query.n))
+            qf = graph_features([query], self.vocab, width=width)
+            parts.append(np.asarray(self._dispatch(qf, b, width))[: b.real])
+            self.stats["scanned"] += b.real
+        return np.concatenate(parts) if parts \
+            else np.zeros(0, dtype=np.float32)
+
+    def scan_by_id(self, query: Graph) -> Dict[int, float]:
+        """:meth:`scan` keyed by corpus id instead of position."""
+        return dict(zip(self.ids, self.scan(query).tolist()))
+
+    # --------------------------------------------------------- internal
+
+    def _dispatch(self, qf: CorpusFeatures, bucket: FeatureBucket,
+                  width: int):
+        import jax
+        import jax.numpy as jnp
+
+        cf = bucket.features
+        key = (bucket.slots, cf.batch, width, cf.vhist.shape[1],
+               cf.ehist.shape[1])
+        fn = self._fns.get(key)
+        if fn is None:
+            pad_c = width - cf.degs.shape[1]
+
+            def scan_fn(qvh, qeh, qdeg, qn, qm, cvh, ceh, cdeg, cn, cm):
+                cdeg = jnp.pad(cdeg, ((0, 0), (0, pad_c)))
+                return stage0_lower_bounds(qvh, qeh, qdeg, qn, qm,
+                                           cvh, ceh, cdeg, cn, cm)
+
+            if isinstance(self.executor, ShardedExecutor):
+                from jax.sharding import PartitionSpec as P
+
+                from repro.parallel.ops import shard_map
+                axes = self.executor.axes
+                fn = jax.jit(shard_map(
+                    scan_fn, mesh=self.executor.mesh,
+                    in_specs=(P(),) * 5 + (P(axes),) * 5,
+                    out_specs=P(axes), check=False))
+            else:
+                fn = jax.jit(scan_fn)
+            self._fns[key] = fn
+        return fn(jnp.asarray(qf.vhist[0]), jnp.asarray(qf.ehist[0]),
+                  jnp.asarray(qf.degs[0]), jnp.asarray(qf.n[0]),
+                  jnp.asarray(qf.m[0]), jnp.asarray(cf.vhist),
+                  jnp.asarray(cf.ehist), jnp.asarray(cf.degs),
+                  jnp.asarray(cf.n), jnp.asarray(cf.m))

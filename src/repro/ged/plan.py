@@ -90,6 +90,38 @@ def as_pairs(pairs) -> List[Tuple[Graph, Graph]]:
     return out
 
 
+def graphs_vocab(graphs: Sequence[Graph]) -> Vocab:
+    """Shared ``(vertex_labels, edge_labels)`` vocabulary for a corpus.
+
+    The single-graph analogue of
+    :func:`repro.core.engine.tensor_graphs.label_vocab` — a
+    :class:`repro.ged.GraphStore` computes it once at ingest so every
+    query bucket (and the stage-0 feature histograms) share one compact
+    label space.
+
+    >>> g = as_graph(([0, 5], [(0, 1, 2)]))
+    >>> graphs_vocab([g])
+    ((0, 5), (2,))
+    """
+    return label_vocab([(g, g) for g in graphs])
+
+
+def merge_vocab(vocab: Vocab, graphs: Sequence[Graph]) -> Vocab:
+    """``vocab`` extended with any labels ``graphs`` introduce.
+
+    Queries against an ingested corpus may carry labels the corpus never
+    uses; packing with the merged vocabulary keeps every bucket coverage
+    check satisfied while staying stable (and therefore compile-cached)
+    for the common all-known-labels case.
+
+    >>> merge_vocab(((0,), (1,)), [as_graph(([0, 7], [(0, 1, 3)]))])
+    ((0, 7), (1, 3))
+    """
+    extra_v, extra_e = graphs_vocab(graphs)
+    return (tuple(sorted(set(vocab[0]) | set(extra_v))),
+            tuple(sorted(set(vocab[1]) | set(extra_e))))
+
+
 # -------------------------------------------------------------- bucketing
 
 def _pow2(n: int) -> int:
@@ -162,6 +194,27 @@ class Plan:
     buckets: List[Bucket]
     vocab: Vocab
     fixed_slots: Optional[int]  # user-pinned slot count (disables bucketing)
+
+    @classmethod
+    def lazy(cls, pairs, vocab: Optional[Vocab] = None,
+             slots: Optional[int] = None) -> "Plan":
+        """A plan with *no* packed buckets: pack subsets on demand.
+
+        The staged filter-verify pipeline (:class:`repro.ged.GraphStore`)
+        holds |corpus| candidate pairs per query but expects the filter
+        stages to prune most of them before anything is packed; a lazy
+        plan defers all packing to :meth:`subset_buckets`, so only
+        survivors ever touch tensors::
+
+            plan = Plan.lazy([(q, g) for g in survivors], vocab=vocab)
+            for bucket in plan.subset_buckets(range(len(plan.pairs)),
+                                              executor.pack):
+                ...
+        """
+        pairs = as_pairs(pairs)
+        if vocab is None:
+            vocab = label_vocab(pairs)
+        return cls(pairs, [], vocab, slots)
 
     def subset_buckets(self, indices: Sequence[int], packer) -> List[Bucket]:
         """Incrementally re-bucket a subset of this plan's pairs.

@@ -1,0 +1,425 @@
+"""``ged.GraphStore`` — from pairs to corpora.
+
+The paper's target workload is graph-database similarity search: a filter
+phase prunes the corpus with cheap lower bounds and only survivors reach
+the expensive verifier.  ``GraphStore`` is that workload's front door:
+ingest a corpus once (one shared label vocabulary, per-slot-bucket
+resident feature arrays, per-graph canonical digests for dedup), then ask
+corpus-level questions::
+
+    store = ged.GraphStore(db_graphs)
+    hits = store.range_search(query, tau=4.0)     # all g: delta(q, g) <= tau
+    near = store.top_k(query, k=10)               # 10 nearest by GED
+    per_q = store.search_batch(queries, tau=4.0)  # one hit list per query
+
+Queries run a staged filter-verify pipeline:
+
+* **stage 0** — vectorized label-multiset / degree-sequence / size lower
+  bounds over the entire packed corpus in one fused device pass per slot
+  bucket (:class:`repro.ged.filters.FilterIndex`; sharded over the mesh
+  when the store has one).  Sound: never prunes a true hit.
+* **stage 1** — the existing anchor-aware batched engine bounds on the
+  survivors, at a tiny search budget: one packed pass per slot bucket via
+  :meth:`repro.ged.plan.Plan.subset_buckets` + the store's executor.
+  Pairs it certifies (accept or reject) are done.
+* **stage 2** — full verification of whatever remains through the store's
+  :class:`~repro.ged.GedEngine` (``auto`` backend by default, so every
+  answer is certified; pass ``mesh=`` to shard every stage).
+
+Results come back as ranked :class:`~repro.ged.results.SearchHit` objects
+(corpus id + outcome + the stage that decided it); ``store.stats`` is part
+of the API contract — candidates per stage, filter ratio, verified count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.exact.graph import Graph
+from repro.core.exact.search import ged_verify
+from repro.ged.api import GedEngine
+from repro.ged.exec import (DIGESTS, Executor, ShardedExecutor, detached,
+                            engine_outcome, graph_digest, wl_digest)
+from repro.ged.filters import FilterIndex
+from repro.ged.plan import Plan, Vocab, as_graph, graphs_vocab, merge_vocab
+from repro.ged.results import (STAGE_BOUND, STAGE_FILTER, STAGE_VERIFY,
+                               GedOutcome, SearchHit)
+
+_INF = float("inf")
+
+
+class GraphStore:
+    """An ingested graph corpus with staged similarity search.
+
+    Parameters
+    ----------
+    graphs : corpus in any :func:`repro.ged.plan.as_graph` form.
+    vocab : optional label universe; extended automatically when the
+        corpus (or a query) introduces labels beyond it.
+    backend / mesh / engine : verification engine for stage 2 — default a
+        fresh ``GedEngine("auto", mesh=mesh)`` (certified answers).  Pass
+        an existing ``engine=`` to share its executor, result cache and
+        compile cache (e.g. from a serving process) — exclusive with
+        ``backend``/``mesh``/engine keyword options, which would
+        otherwise be silently ignored.
+    digest : ``"wl"`` (default) additionally dedups *isomorphic* corpus
+        entries: WL-digest collisions are candidate groups, and every
+        candidate merge is confirmed by a certified zero-distance check
+        with the exact host solver at ingest (WL refinement alone is an
+        incomplete isomorphism test — unconfirmed collisions stay
+        separate, so search answers are never aliased).  ``"exact"`` is
+        the byte-identical fallback knob, skipping WL grouping entirely.
+    filter_iters / filter_pool : stage-1 engine budget (``filter_iters=0``
+        disables stage 1).
+    Remaining keyword arguments go to the :class:`GedEngine` constructor
+    (``cache=``, ``pool=``, ``batch_size=`` ...).
+
+    Examples
+    --------
+    >>> from repro import ged
+    >>> store = ged.GraphStore([([0, 1], [(0, 1, 1)]), ([0, 5], [])],
+    ...                        backend="exact", filter_iters=0)
+    >>> [h.graph_id for h in store.range_search(([0, 1], [(0, 1, 1)]), 0.5)]
+    [0]
+    >>> store.stats["candidates"], store.stats["stage0_pruned"]
+    (2, 1)
+    """
+
+    def __init__(self, graphs, *, vocab: Optional[Vocab] = None,
+                 backend: str = "auto", mesh=None,
+                 engine: Optional[GedEngine] = None,
+                 digest: str = "wl", filter_iters: int = 2,
+                 filter_pool: int = 32, **engine_options):
+        if digest not in DIGESTS:
+            raise ValueError(f"unknown digest {digest!r}; "
+                             f"expected one of {sorted(DIGESTS)}")
+        if engine is not None and (backend != "auto" or mesh is not None
+                                   or engine_options):
+            # a supplied engine brings its own backend, placement and
+            # config — accepting these too would silently ignore them
+            clash = sorted(engine_options) + \
+                (["mesh"] if mesh is not None else []) + \
+                ([f"backend={backend!r}"] if backend != "auto" else [])
+            raise TypeError(
+                f"engine= is exclusive with engine construction options "
+                f"(got {clash}); configure the engine you pass in")
+        self.graphs: List[Graph] = [as_graph(g) for g in graphs]
+        self.digest = digest
+        # Byte-identical grouping first (always sound), then — under the
+        # "wl" digest — isomorphism candidates via WL collision, each
+        # merge *confirmed* by a certified GED == 0 check so a WL
+        # collision between non-isomorphic graphs can never alias answers.
+        exact_groups: Dict[bytes, List[int]] = {}
+        for i, g in enumerate(self.graphs):
+            exact_groups.setdefault(graph_digest(g), []).append(i)
+        self._exact_of: Dict[bytes, int] = {
+            d: ids[0] for d, ids in exact_groups.items()}
+        self._dedup_checks = 0
+        groups: List[List[int]] = []
+        if digest == "wl":
+            candidates: Dict[bytes, List[List[int]]] = {}
+            for ids in exact_groups.values():
+                candidates.setdefault(wl_digest(self.graphs[ids[0]]),
+                                      []).append(ids)
+            for subs in candidates.values():
+                # compare against every group already formed in this WL
+                # bucket (not just the first), so two isomorphic entries
+                # still merge when a non-isomorphic collider sorts first
+                formed: List[List[int]] = []
+                for sub in subs:
+                    for grp in formed:
+                        self._dedup_checks += 1
+                        if ged_verify(self.graphs[grp[0]],
+                                      self.graphs[sub[0]], 0.0,
+                                      bound="BMa").similar:
+                            grp.extend(sub)
+                            break
+                    else:       # no confirmed match: its own group
+                        formed.append(list(sub))
+                groups.extend(sorted(g) for g in formed)
+        else:
+            groups.extend(exact_groups.values())
+        self._members: Dict[int, List[int]] = {
+            ids[0]: sorted(ids) for ids in groups}
+        self._rep_of: Dict[int, int] = {
+            i: rep for rep, ids in self._members.items() for i in ids}
+        self._rep_ids: List[int] = sorted(self._members)
+
+        self.vocab: Vocab = (merge_vocab(vocab, self.graphs) if vocab
+                             else graphs_vocab(self.graphs))
+        if engine is None:
+            # The engine's result cache stays on exact digests: WL keys
+            # would alias WL-equivalent non-isomorphic pairs *without*
+            # the certified confirmation the dedup above gets.
+            engine = GedEngine(backend, mesh=mesh, **engine_options)
+        self.engine = engine
+        executor = getattr(engine._backend, "executor", None)
+        if executor is None:
+            executor = ShardedExecutor(mesh) if mesh is not None \
+                else Executor()
+        self.executor = executor
+        self._filter_cfg = None
+        if filter_iters:
+            self._filter_cfg = dataclasses.replace(
+                engine.config, pool=int(filter_pool), expand=2,
+                max_iters=int(filter_iters))
+        self._index = FilterIndex(self.graphs, self._rep_ids, self.vocab,
+                                  self.executor)
+        self._counts: Dict[str, float] = {
+            "queries": 0, "candidates": 0, "stage0_pruned": 0,
+            "stage1_decided": 0, "stage1_accepted": 0, "stage2_verified": 0,
+            "hits": 0, "topk_candidates": 0, "topk_verified": 0,
+            "scan_wall_s": 0.0, "bound_wall_s": 0.0, "verify_wall_s": 0.0,
+        }
+
+    def __len__(self) -> int:
+        return len(self.graphs)
+
+    def member_id(self, graph) -> Optional[int]:
+        """Corpus id of a *byte-identical* ingested graph, or ``None``.
+
+        Deliberately exact (not WL): request routing must never match a
+        merely WL-equivalent graph, whose true distance could differ.
+        """
+        return self._exact_of.get(graph_digest(as_graph(graph)))
+
+    # ------------------------------------------------------------ search
+
+    def range_search(self, query, tau: float) -> List[SearchHit]:
+        """Every corpus graph with ``delta(query, g) <= tau``, ranked.
+
+        Hits are sorted by ``(upper_bound, graph_id)`` — the certified
+        upper bound is exact when a stage decided the pair by computing
+        the distance, and at most ``tau`` otherwise.
+        """
+        q = as_graph(query)
+        tau = float(tau)
+        self._counts["queries"] += 1
+        jobs = [(rid, tau) for rid in self._rep_ids]
+        decided = self._staged_verify(q, jobs)
+        hits: List[SearchHit] = []
+        for (rid, _), (outcome, stage) in zip(jobs, decided):
+            if outcome.similar:
+                hits.extend(self._group_hits(rid, outcome, stage))
+        hits.sort(key=lambda h: (h.upper_bound, h.graph_id))
+        self._counts["hits"] += len(hits)
+        return hits
+
+    def top_k(self, query, k: int) -> List[SearchHit]:
+        """The ``k`` nearest corpus graphs by exact GED, ranked.
+
+        Candidates are visited in increasing stage-0 lower-bound order
+        and verified in chunks; the walk stops as soon as the next
+        candidate's lower bound exceeds the current k-th best distance,
+        so most of the corpus is never verified.  Ties break by corpus
+        id, matching a brute-force ``(ged, id)`` sort.
+        """
+        k = int(k)
+        if k <= 0 or not self.graphs:
+            return []
+        q = as_graph(query)
+        self._counts["queries"] += 1
+        self._counts["topk_candidates"] += len(self._rep_ids)
+        t0 = time.perf_counter()
+        lb_of = self._index.scan_by_id(q)
+        self._counts["scan_wall_s"] += time.perf_counter() - t0
+        order = sorted(self._rep_ids, key=lambda rid: (lb_of[rid], rid))
+        vocab = merge_vocab(self.vocab, [q])
+        chunk = max(k, 8)
+        collected: List[Tuple[float, int, GedOutcome]] = []
+        i = 0
+        while i < len(order):
+            kth = collected[k - 1][0] if len(collected) >= k else _INF
+            if lb_of[order[i]] > kth:
+                break
+            reps = order[i:i + chunk]
+            t0 = time.perf_counter()
+            outs = self.engine.compute(
+                [(q, self.graphs[rid]) for rid in reps], vocab=vocab)
+            self._counts["verify_wall_s"] += time.perf_counter() - t0
+            self._counts["topk_verified"] += len(reps)
+            for rid, outcome in zip(reps, outs):
+                outcome.stats["stage"] = STAGE_VERIFY
+                for hit in self._group_hits(rid, outcome, STAGE_VERIFY):
+                    collected.append((hit.ged, hit.graph_id, hit.outcome))
+            collected.sort(key=lambda t: (t[0], t[1]))
+            i += len(reps)
+        hits = [SearchHit(gid, outcome, STAGE_VERIFY)
+                for _, gid, outcome in collected[:k]]
+        self._counts["hits"] += len(hits)
+        return hits
+
+    def search_batch(self, queries, tau: float) -> List[List[SearchHit]]:
+        """One ranked :meth:`range_search` hit list per query.
+
+        Each hit's ``query_id`` is its query's position in ``queries``.
+        """
+        out = []
+        for qi, query in enumerate(queries):
+            hits = self.range_search(query, tau)
+            for h in hits:
+                h.query_id = qi
+            out.append(hits)
+        return out
+
+    def verify_members(self, query, ids: Sequence[int],
+                       taus) -> List[GedOutcome]:
+        """Verify ``delta(query, graphs[id]) <= tau`` for specific members.
+
+        The staged filter runs first (resident stage-0 features, then the
+        stage-1 engine bounds), so a batch of requests against ingested
+        graphs pays full verification only for undecided pairs — this is
+        what :class:`repro.serving.GedVerificationService` routes batch
+        traffic through once a corpus is registered.  ``taus`` is a
+        scalar or one threshold per id.
+        """
+        q = as_graph(query)
+        ids = [int(i) for i in ids]
+        for gid in ids:
+            if gid not in self._rep_of:
+                raise KeyError(f"graph id {gid} is not in this store")
+        taus = np.broadcast_to(
+            np.asarray(taus, dtype=np.float64), (len(ids),))
+        jobs: List[Tuple[int, float]] = []
+        slot: Dict[Tuple[int, float], int] = {}
+        for gid, tau in zip(ids, taus):
+            key = (self._rep_of[gid], float(tau))
+            if key not in slot:
+                slot[key] = len(jobs)
+                jobs.append(key)
+        decided = self._staged_verify(q, jobs)
+        out = []
+        served: set = set()
+        for gid, tau in zip(ids, taus):
+            key = (self._rep_of[gid], float(tau))
+            outcome, _ = decided[slot[key]]
+            if gid != key[0]:
+                out.append(self._dup(outcome))
+            elif key in served:
+                # duplicate request: its own detached copy, preserving
+                # the engine path's per-position-independence invariant
+                out.append(detached(outcome, dict(outcome.stats)))
+            else:
+                served.add(key)
+                out.append(outcome)
+        return out
+
+    # ------------------------------------------------------------- stats
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        """Pipeline counters — the API contract for filter efficiency.
+
+        ``candidates`` (deduped pairs entering the pipeline across all
+        range/verify queries), ``stage0_pruned``, ``stage1_decided`` /
+        ``stage1_accepted``, ``stage2_verified``, ``filter_ratio``
+        (fraction of candidates decided *before* full verification),
+        ``hits``, per-stage wall splits (``scan_wall_s`` /
+        ``bound_wall_s`` / ``verify_wall_s``), top-k counters, dedup
+        totals, and the engine's own counters under ``engine_*``.
+        """
+        out = dict(self._counts)
+        cand = out["candidates"]
+        out["filter_ratio"] = \
+            (cand - out["stage2_verified"]) / cand if cand else 0.0
+        out["dedup_groups"] = len(self._rep_ids)
+        out["dedup_duplicates"] = len(self.graphs) - len(self._rep_ids)
+        out["dedup_checks"] = self._dedup_checks
+        out.update({f"engine_{k}": v for k, v in self.engine.stats.items()})
+        return out
+
+    # --------------------------------------------------------- internal
+
+    def _staged_verify(self, q: Graph, jobs: Sequence[Tuple[int, float]]
+                       ) -> List[Tuple[GedOutcome, int]]:
+        """Run the filter-verify pipeline for ``(rep_id, tau)`` jobs.
+
+        Returns one ``(outcome, stage)`` per job, aligned.  Every stage
+        only *decides* soundly: stage 0 rejects when its lower bound
+        exceeds tau, stage 1 trusts the engine's certificate, stage 2
+        verifies whatever survived.
+        """
+        self._counts["candidates"] += len(jobs)
+        results: List[Optional[Tuple[GedOutcome, int]]] = [None] * len(jobs)
+
+        t0 = time.perf_counter()
+        lb_of = self._index.scan_by_id(q)
+        self._counts["scan_wall_s"] += time.perf_counter() - t0
+        survivors: List[int] = []
+        for pos, (rid, tau) in enumerate(jobs):
+            lb = lb_of[rid]
+            if lb > tau:
+                self._counts["stage0_pruned"] += 1
+                results[pos] = (GedOutcome(
+                    ged=None, similar=False, certified=True,
+                    lower_bound=lb, upper_bound=_INF, mapping=None,
+                    backend="store/filter", wall_s=0.0, tau=tau,
+                    stats={"stage": STAGE_FILTER}), STAGE_FILTER)
+            else:
+                survivors.append(pos)
+
+        vocab = merge_vocab(self.vocab, [q])
+        if survivors and self._filter_cfg is not None:
+            plan = Plan.lazy(
+                [(q, self.graphs[jobs[pos][0]]) for pos in survivors],
+                vocab=vocab)
+            taus_arr = np.asarray([jobs[pos][1] for pos in survivors],
+                                  dtype=np.float32)
+            undecided: List[int] = []
+            for bucket in plan.subset_buckets(range(len(survivors)),
+                                              self.executor.pack):
+                t0 = time.perf_counter()
+                out = self.executor.run_bucket(bucket, taus_arr,
+                                               self._filter_cfg, True)
+                wall = time.perf_counter() - t0
+                self._counts["bound_wall_s"] += wall
+                for bi, pi in enumerate(bucket.indices):
+                    pos = survivors[pi]
+                    if bool(out["exact"][bi]):
+                        outcome = engine_outcome(
+                            out, bucket.packed, bi, True,
+                            float(taus_arr[pi]), "store/bound", wall,
+                            rung=0)
+                        outcome.stats["stage"] = STAGE_BOUND
+                        self._counts["stage1_decided"] += 1
+                        if outcome.similar:
+                            self._counts["stage1_accepted"] += 1
+                        results[pos] = (outcome, STAGE_BOUND)
+                    else:
+                        undecided.append(pos)
+            survivors = sorted(undecided)
+
+        if survivors:
+            t0 = time.perf_counter()
+            outs = self.engine.verify(
+                [(q, self.graphs[jobs[pos][0]]) for pos in survivors],
+                [jobs[pos][1] for pos in survivors], vocab=vocab)
+            self._counts["verify_wall_s"] += time.perf_counter() - t0
+            self._counts["stage2_verified"] += len(survivors)
+            for pos, outcome in zip(survivors, outs):
+                outcome.stats["stage"] = STAGE_VERIFY
+                results[pos] = (outcome, STAGE_VERIFY)
+        return results  # type: ignore[return-value]
+
+    def _group_hits(self, rid: int, outcome: GedOutcome,
+                    stage: int) -> List[SearchHit]:
+        """Hits for every corpus entry sharing ``rid``'s digest group."""
+        return [SearchHit(gid, outcome if gid == rid else self._dup(outcome),
+                          stage)
+                for gid in self._members[rid]]
+
+    def _dup(self, outcome: GedOutcome) -> GedOutcome:
+        """A duplicate corpus entry's copy of its representative's answer.
+
+        Under the ``"wl"`` digest duplicates are isomorphic-but-not-
+        identical, so the representative's vertex mapping does not apply
+        and is dropped; exact-digest duplicates keep it.
+        """
+        out = detached(outcome, {**outcome.stats, "dedup": True})
+        if self.digest == "wl":
+            out = dataclasses.replace(out, mapping=None)
+        return out

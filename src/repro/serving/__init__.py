@@ -1,4 +1,6 @@
-from repro.serving.ged_service import GedVerificationService, GedRequest
+from repro.serving.ged_service import (GedRequest, GedSimilarityService,
+                                       GedVerificationService, SearchRequest)
 from repro.serving.lm_decode import generate
 
-__all__ = ["GedVerificationService", "GedRequest", "generate"]
+__all__ = ["GedVerificationService", "GedSimilarityService", "GedRequest",
+           "SearchRequest", "generate"]

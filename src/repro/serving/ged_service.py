@@ -1,32 +1,41 @@
-"""Batched GED verification service — the paper's §5.3 workload as a
-production server.
+"""GED serving: pairwise verification and corpus similarity search.
 
-Request: (q, g, tau) -> "is delta(q, g) <= tau?", certified.
+Two services over the ``repro.ged`` facade:
 
-The pipeline (difficulty prediction, LPT straggler packing, batched
-AStar+-hybrid engine, escalation through bigger-pool rungs, exact host
-solver as the final rung) lives in ``repro.ged.backends.AutoBackend``;
-this service is a thin request/response wrapper over
-``repro.ged.GedEngine(backend="auto")`` and therefore rides the
-overlapped (async-dispatch) rung path — pass ``mesh=`` to shard every
-rung over a device mesh, ``overlap=False`` for the sequential loop.  Every answer it returns is
-certified exact, and every answer is a ``repro.ged.GedOutcome``.
+* :class:`GedVerificationService` — request/response wrapper for
+  (q, g, tau) -> "is delta(q, g) <= tau?", certified, over
+  ``GedEngine(backend="auto")`` (difficulty prediction, LPT straggler
+  packing, batched AStar+-hybrid engine, escalation rungs, exact host
+  solver as the final rung).  It rides the overlapped (async-dispatch)
+  rung path — pass ``mesh=`` to shard every rung over a device mesh,
+  ``overlap=False`` for the sequential loop.  Once a corpus is
+  registered (:meth:`~GedVerificationService.register_corpus`), batch
+  verification requests whose target graph lives in the corpus route
+  through the :class:`~repro.ged.GraphStore` filter pipeline — resident
+  stage-0 bounds plus the stage-1 engine-bound pass decide most pairs
+  before full verification runs.
+* :class:`GedSimilarityService` — the corpus-search route: ingest a
+  database once, then serve ``range_search`` / ``top_k`` /
+  ``search_batch`` requests returning ranked
+  :class:`~repro.ged.SearchHit` lists (see ``docs/search.md``).
+
 Duplicate requests — the common case for similarity-search traffic —
 are deduplicated by the engine's result cache (tau-aware), so repeats
 cost a hash lookup, not a search.
-``GedResult`` aliases it for *readers* of the old result type (the
-``similar``/``ged``/``certified``/``rung``/``wall_s`` fields survive);
-code that *constructed* ``GedResult`` must switch to ``GedOutcome``'s
-richer signature.
+``GedResult`` aliases ``GedOutcome`` for *readers* of the old result
+type (the ``similar``/``ged``/``certified``/``rung``/``wall_s`` fields
+survive); code that *constructed* ``GedResult`` must switch to
+``GedOutcome``'s richer signature.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.exact.graph import Graph
-from repro.ged import GedEngine, GedOutcome
+from repro.ged import GedEngine, GedOutcome, GraphStore, SearchHit, as_graph
+from repro.ged.exec import graph_digest
 
 GedResult = GedOutcome  # read-compatible alias (see module docstring)
 
@@ -36,6 +45,15 @@ class GedRequest:
     q: Graph
     g: Graph
     tau: float = 0.0
+
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One corpus-similarity query: range search (``tau``) or ``k``-NN."""
+
+    query: object                # anything ``repro.ged.as_graph`` accepts
+    tau: Optional[float] = None  # range search threshold
+    k: Optional[int] = None      # top-k (exclusive with tau)
 
 
 class GedVerificationService:
@@ -48,6 +66,12 @@ class GedVerificationService:
         svc = GedVerificationService(batch_size=128,
                                      mesh=jax.make_mesh((8,), ("data",)))
         outs = svc.verify([GedRequest(q, g, tau=4.0), ...])
+
+    With a registered corpus, batch verification against known graphs
+    goes through the store's staged filter first::
+
+        svc.register_corpus(db_graphs)
+        outs = svc.verify(reqs)     # in-corpus targets: filter-then-verify
     """
 
     def __init__(self, batch_size: int = 256, slots: int = 32,
@@ -61,18 +85,117 @@ class GedVerificationService:
         # exposed for tests/tuning: mutating ``scheduler.rungs`` reshapes
         # the escalation ladder of the underlying auto backend.
         self.scheduler = self.engine._backend.scheduler
+        self.store: Optional[GraphStore] = None
 
     @property
     def stats(self) -> Dict[str, float]:
-        """Pipeline counters plus executor / cache hit totals."""
-        return self.engine.stats
+        """Pipeline counters plus executor / cache hit totals (and the
+        registered store's ``store_*`` counters, once a corpus exists)."""
+        out = dict(self.engine.stats)
+        if self.store is not None:
+            out.update({f"store_{k}": v for k, v in self.store.stats.items()
+                        if not k.startswith("engine_")})
+        return out
 
     # ------------------------------------------------------------ public
 
+    def register_corpus(self, graphs, **store_options) -> GraphStore:
+        """Ingest a corpus; later batch verification against its members
+        routes through the store's filter-verify pipeline.
+
+        The store shares this service's engine — and therefore its
+        result cache, compile cache and executor (mesh placement
+        included) — so ``store_options`` may only carry store-level
+        knobs (``digest``, ``filter_iters``, ``filter_pool``,
+        ``vocab``); engine-level options raise.  Returns the store for
+        direct ``range_search`` / ``top_k`` use.
+        """
+        # GedEngine slots are pinned for the serving batch shape; the
+        # store's stage-1 buckets pack through the same engine config.
+        self.store = GraphStore(graphs, engine=self.engine,
+                                **store_options)
+        return self.store
+
     def verify(self, requests: Sequence[GedRequest]) -> List[GedOutcome]:
-        return self.engine.verify([(r.q, r.g) for r in requests],
-                                  [r.tau for r in requests])
+        if self.store is None:
+            return self.engine.verify([(r.q, r.g) for r in requests],
+                                      [r.tau for r in requests])
+        # Route in-corpus targets through the staged filter; everything
+        # else takes the plain engine path.  Matching and query grouping
+        # are byte-exact (graph_digest): a merely-isomorphic rewrite must
+        # not be answered with another graph's outcome or mapping.
+        results: List[Optional[GedOutcome]] = [None] * len(requests)
+        in_store: Dict[bytes, List[int]] = {}
+        direct: List[int] = []
+        member: Dict[int, int] = {}
+        for i, r in enumerate(requests):
+            gid = self.store.member_id(r.g)
+            if gid is None:
+                direct.append(i)
+            else:
+                member[i] = gid
+                in_store.setdefault(graph_digest(as_graph(r.q)),
+                                    []).append(i)
+        for idxs in in_store.values():
+            outs = self.store.verify_members(
+                requests[idxs[0]].q, [member[i] for i in idxs],
+                [requests[i].tau for i in idxs])
+            for i, o in zip(idxs, outs):
+                results[i] = o
+        if direct:
+            outs = self.engine.verify(
+                [(requests[i].q, requests[i].g) for i in direct],
+                [requests[i].tau for i in direct])
+            for i, o in zip(direct, outs):
+                results[i] = o
+        return results  # type: ignore[return-value]
 
     def compute(self, pairs: Sequence[Tuple[Graph, Graph]]
                 ) -> List[GedOutcome]:
         return self.engine.compute(pairs)
+
+
+class GedSimilarityService:
+    """Corpus similarity search as a request/response service.
+
+    A thin route over :class:`repro.ged.GraphStore`: ingest the database
+    at construction, then serve ranged and k-NN queries.  Example::
+
+        svc = GedSimilarityService(db_graphs, mesh=mesh)
+        hits = svc.range_search(query, tau=4.0)
+        answers = svc.search([SearchRequest(q1, tau=3.0),
+                              SearchRequest(q2, k=10)])
+    """
+
+    def __init__(self, graphs, *, mesh=None, batch_size: int = 256,
+                 **store_options):
+        self.store = GraphStore(graphs, mesh=mesh, batch_size=batch_size,
+                                **store_options)
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        """The store's filter/verify counters (``docs/search.md``)."""
+        return self.store.stats
+
+    def range_search(self, query, tau: float) -> List[SearchHit]:
+        return self.store.range_search(query, tau)
+
+    def top_k(self, query, k: int) -> List[SearchHit]:
+        return self.store.top_k(query, k)
+
+    def search(self, requests: Sequence[SearchRequest]
+               ) -> List[List[SearchHit]]:
+        """Answer a mixed batch of range / top-k requests, in order."""
+        for r in requests:          # validate before any work runs
+            if (r.tau is None) == (r.k is None):
+                raise ValueError(
+                    "SearchRequest needs exactly one of tau= or k=")
+        out: List[List[SearchHit]] = []
+        for qi, r in enumerate(requests):
+            hits = (self.store.range_search(r.query, r.tau)
+                    if r.tau is not None else
+                    self.store.top_k(r.query, r.k))
+            for h in hits:
+                h.query_id = qi
+            out.append(hits)
+        return out

@@ -1,0 +1,95 @@
+"""The benchmark-trajectory diff tool: section/row/metric alignment,
+regression detection, and baseline fallbacks."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+from bench_diff import (diff_sections, label_rows, regressions,  # noqa: E402
+                        row_label)
+
+OLD = {
+    "backend_throughput": [
+        {"backend": "jax", "pairs_per_s": 100.0, "compile_s": 5.0},
+        {"backend": "sharded", "pairs_per_s": 80.0},
+    ],
+    "escalation_overlap": [{"mode": "sequential", "pairs_per_s": 50.0}],
+}
+NEW = {
+    "backend_throughput": [
+        {"backend": "jax", "pairs_per_s": 70.0, "compile_s": 4.0},
+        {"backend": "sharded", "pairs_per_s": 85.0},
+    ],
+    "similarity_search": [{"corpus": 132, "queries_per_s": 9.0}],
+}
+
+
+def test_rows_align_by_identity_not_position():
+    rows = diff_sections(OLD, NEW)
+    jax_tp = next(r for r in rows if r["row"] == "backend=jax"
+                  and r["metric"] == "pairs_per_s")
+    assert jax_tp["old"] == 100.0 and jax_tp["new"] == 70.0
+    assert jax_tp["delta_pct"] == -30.0
+    shard = next(r for r in rows if r["row"] == "backend=sharded"
+                 and r["metric"] == "pairs_per_s")
+    assert shard["delta_pct"] == 6.25
+
+
+def test_added_and_removed_sections_survive():
+    rows = diff_sections(OLD, NEW)
+    added = [r for r in rows if r["section"] == "similarity_search"]
+    assert added and all(r["old"] is None and r["delta_pct"] is None
+                         for r in added)
+    gone = [r for r in rows if r["section"] == "escalation_overlap"]
+    assert gone and all(r["new"] is None for r in gone)
+
+
+def test_regressions_flag_only_big_throughput_drops():
+    rows = diff_sections(OLD, NEW)
+    regs = regressions(rows, threshold_pct=20.0)
+    assert [(r["row"], r["metric"]) for r in regs] == \
+        [("backend=jax", "pairs_per_s")]
+    assert regressions(rows, threshold_pct=50.0) == []
+    # non-throughput metrics (compile_s shrank 20%) never count
+    assert all(r["metric"].endswith("_per_s") for r in regs)
+
+
+def test_row_label_falls_back_to_position():
+    assert row_label({"backend": "jax"}, 0) == "backend=jax"
+    assert row_label({"tau": 3.0}, 1) == "tau=3.0"
+    assert row_label({"x": 1}, 2) == "row2"
+
+
+def test_duplicate_row_labels_do_not_collide():
+    """Two rows with the same identifying field must both be diffed."""
+    rows = [{"backend": "jax", "pairs_per_s": 10.0},
+            {"backend": "jax", "pairs_per_s": 20.0}]
+    assert set(label_rows(rows)) == {"backend=jax", "backend=jax#1"}
+    diff = diff_sections({"s": rows},
+                         {"s": [{"backend": "jax", "pairs_per_s": 10.0},
+                                {"backend": "jax", "pairs_per_s": 5.0}]})
+    tp = {r["row"]: r for r in diff if r["metric"] == "pairs_per_s"}
+    assert tp["backend=jax"]["delta_pct"] == 0.0
+    assert tp["backend=jax#1"]["delta_pct"] == -75.0
+    assert len(regressions(diff, 20.0)) == 1
+
+
+def test_cli_handles_missing_file_and_is_non_blocking(tmp_path):
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "bench_diff.py"),
+         str(tmp_path / "nope.json")],
+        capture_output=True, text=True, cwd=ROOT)
+    assert out.returncode == 0                   # warn, never gate
+    # a file with no committed baseline also exits 0
+    scratch = tmp_path / "BENCH.json"
+    scratch.write_text(json.dumps(NEW))
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "bench_diff.py"),
+         str(scratch)],
+        capture_output=True, text=True, cwd=ROOT)
+    assert out.returncode == 0
+    assert "no baseline" in out.stdout

@@ -17,7 +17,7 @@ def _doc_files():
 def test_docs_suite_exists():
     names = {p.name for p in _doc_files()}
     assert {"README.md", "architecture.md", "backends.md",
-            "benchmarks.md"} <= names
+            "benchmarks.md", "search.md"} <= names
 
 
 def test_no_broken_links_or_anchors():

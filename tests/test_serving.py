@@ -1,4 +1,5 @@
-"""Serving layer: GED verification service correctness + LM generation."""
+"""Serving layer: GED verification service correctness, corpus routing,
+the similarity-search service, and LM generation."""
 
 import dataclasses
 
@@ -10,7 +11,8 @@ from repro.core.exact.search import ged as exact_ged
 from repro.data.graphs import perturb, random_graph
 from repro.models.config import reduced
 from repro.models.params import init_params
-from repro.serving import GedRequest, GedVerificationService, generate
+from repro.serving import (GedRequest, GedSimilarityService,
+                           GedVerificationService, SearchRequest, generate)
 
 
 @pytest.fixture(scope="module")
@@ -61,6 +63,54 @@ def test_escalation_path_used_for_hard_pairs():
     assert svc.stats["escalated"] + svc.stats["host_solved"] > 0
     for r, req, t in zip(results, reqs, truths):
         assert r.certified and r.similar == (t <= req.tau)
+
+
+def test_verify_routes_registered_corpus_through_store(request_set):
+    """With a corpus registered, batch verification against in-corpus
+    targets goes through the staged filter — and answers stay identical
+    to the plain engine path."""
+    reqs, truths = request_set
+    corpus = [r.g for r in reqs[:16]]
+    svc = GedVerificationService(batch_size=8, slots=16)
+    store = svc.register_corpus(corpus)
+    assert store.engine is svc.engine          # shared cache + executor
+
+    rng = np.random.default_rng(21)
+    stray = GedRequest(reqs[0].q,
+                       random_graph(rng, 7), tau=3.0)   # not in the corpus
+    # duck-typed query form must survive the corpus-routed path too
+    ducky = GedRequest(([0, 1], [(0, 1, 1)]), corpus[0], tau=50.0)
+    results = svc.verify(list(reqs[:16]) + [stray, ducky])
+    for r, req, t in zip(results[:16], reqs[:16], truths[:16]):
+        assert r.certified
+        assert r.similar == (t <= req.tau), (t, req.tau, r)
+    assert results[16].certified
+    assert results[17].certified and results[17].similar
+    s = svc.stats
+    assert s["store_candidates"] == 17
+    assert s["store_stage0_pruned"] + s["store_stage1_decided"] + \
+        s["store_stage2_verified"] == 17
+    # a shared engine is exclusive with engine-level store options
+    with pytest.raises(TypeError):
+        svc.register_corpus(corpus, cache=False)
+
+
+def test_similarity_service_range_and_topk():
+    rng = np.random.default_rng(23)
+    corpus = [random_graph(rng, int(rng.integers(4, 8)), density=0.4,
+                           n_vlabels=3, n_elabels=2) for _ in range(8)]
+    svc = GedSimilarityService(corpus, batch_size=8, pool=256, expand=4,
+                               max_iters=256)
+    q = corpus[2]
+    hits = svc.range_search(q, 0.0)
+    assert any(h.graph_id == 2 for h in hits)
+    answers = svc.search([SearchRequest(q, tau=1.0), SearchRequest(q, k=3)])
+    assert len(answers) == 2
+    assert all(h.query_id == 0 for h in answers[0])
+    assert len(answers[1]) == 3 and answers[1][0].graph_id == 2
+    assert svc.stats["queries"] == 3
+    with pytest.raises(ValueError):
+        svc.search([SearchRequest(q)])          # neither tau nor k
 
 
 def test_lm_generate_runs():

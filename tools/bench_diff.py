@@ -1,0 +1,192 @@
+#!/usr/bin/env python
+"""Benchmark-trajectory diff for ``results/bench/BENCH_engine.json``.
+
+The benchmark record is committed per PR (``{section: rows}`` via
+``benchmarks.common.record_section``); this tool compares the current file
+against the previously *committed* version and prints a per-metric
+regression table, so CI surfaces perf drift without blocking on it
+(timings on shared runners are noisy — the table is a warning, not a
+gate).
+
+Usage::
+
+    python tools/bench_diff.py                       # vs previous commit
+    python tools/bench_diff.py --base HEAD~3         # vs an explicit ref
+    python tools/bench_diff.py --strict              # exit 1 on regression
+
+The baseline is ``git show <ref>:<file>``; ``--base`` defaults to the
+last commit that touched the file *before* the current one, i.e. the
+previous benchmark run that was checked in.  Throughput metrics
+(``*_per_s``) count as regressed when they drop more than ``--threshold``
+(default 20%); everything else is informational.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+DEFAULT_FILE = "results/bench/BENCH_engine.json"
+# Row fields used to label a row inside a section (first match wins).
+ROW_KEYS = ("backend", "mode", "strategy", "bound", "tau", "corpus")
+
+
+def row_label(row: Dict[str, Any], index: int) -> str:
+    for key in ROW_KEYS:
+        if key in row:
+            return f"{key}={row[key]}"
+    return f"row{index}"
+
+
+def label_rows(rows: List[Dict]) -> Dict[str, Dict]:
+    """Rows keyed by label, duplicates disambiguated by occurrence.
+
+    Two rows sharing their identifying field (e.g. the same backend at
+    two taus) must both survive into the diff, so repeats get a ``#n``
+    suffix instead of overwriting each other.
+    """
+    out: Dict[str, Dict] = {}
+    seen: Dict[str, int] = {}
+    for i, row in enumerate(rows):
+        label = row_label(row, i)
+        n = seen.get(label, 0)
+        seen[label] = n + 1
+        out[label if n == 0 else f"{label}#{n}"] = row
+    return out
+
+
+def numeric_metrics(row: Dict[str, Any]) -> Dict[str, float]:
+    return {k: float(v) for k, v in row.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)}
+
+
+def diff_sections(old: Dict[str, List[Dict]], new: Dict[str, List[Dict]]
+                  ) -> List[Dict[str, Any]]:
+    """Flat comparison rows: one per (section, row, shared numeric metric).
+
+    Sections or rows present on only one side are reported with the other
+    value ``None`` (new sections appear as additions, vanished ones as
+    removals); ``delta_pct`` is filled only when both sides have a value.
+    """
+    out: List[Dict[str, Any]] = []
+    for section in sorted(set(old) | set(new)):
+        orows = label_rows(old.get(section, []))
+        nrows = label_rows(new.get(section, []))
+        for label in sorted(set(orows) | set(nrows)):
+            om = numeric_metrics(orows.get(label, {}))
+            nm = numeric_metrics(nrows.get(label, {}))
+            for metric in sorted(set(om) | set(nm)):
+                a, b = om.get(metric), nm.get(metric)
+                delta = None
+                if a is not None and b is not None and a != 0:
+                    delta = 100.0 * (b - a) / abs(a)
+                out.append({"section": section, "row": label,
+                            "metric": metric, "old": a, "new": b,
+                            "delta_pct": delta})
+    return out
+
+
+def regressions(rows: List[Dict[str, Any]], threshold_pct: float
+                ) -> List[Dict[str, Any]]:
+    """Throughput metrics that dropped more than ``threshold_pct``."""
+    return [r for r in rows
+            if r["metric"].endswith("_per_s")
+            and r["delta_pct"] is not None
+            and r["delta_pct"] < -threshold_pct]
+
+
+def load_baseline(path: str, base: Optional[str]) -> Tuple[Optional[Dict],
+                                                           str]:
+    """The committed baseline JSON for ``path`` (and the ref used)."""
+    if base is None:
+        log = subprocess.run(
+            ["git", "log", "--format=%H", "-2", "HEAD", "--", path],
+            capture_output=True, text=True)
+        commits = log.stdout.split()
+        if log.returncode != 0 or not commits:
+            return None, "(no git history)"
+        # if the working tree still matches HEAD's copy, HEAD *is* the
+        # baseline of interest only when an older run exists; prefer the
+        # previous touching commit, falling back to HEAD.
+        base = commits[1] if len(commits) > 1 else commits[0]
+    show = subprocess.run(["git", "show", f"{base}:{path}"],
+                          capture_output=True, text=True)
+    if show.returncode != 0:
+        return None, base
+    try:
+        data = json.loads(show.stdout)
+    except ValueError:
+        return None, base
+    return (data if isinstance(data, dict) else None), base
+
+
+def print_diff(rows: List[Dict[str, Any]]) -> None:
+    def fmt(v) -> str:
+        if v is None:
+            return "-"
+        return f"{v:.5g}" if isinstance(v, float) else str(v)
+
+    header = f"{'section':<22} {'row':<22} {'metric':<22} " \
+             f"{'old':>12} {'new':>12} {'delta%':>8}"
+    print(header)
+    print("-" * len(header))
+    for r in rows:
+        print(f"{r['section']:<22} {r['row']:<22} {r['metric']:<22} "
+              f"{fmt(r['old']):>12} {fmt(r['new']):>12} "
+              f"{fmt(r['delta_pct']):>8}")
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("file", nargs="?", default=DEFAULT_FILE)
+    ap.add_argument("--base", default=None,
+                    help="git ref for the baseline (default: previous "
+                         "commit touching the file)")
+    ap.add_argument("--threshold", type=float, default=20.0,
+                    help="throughput-drop warn threshold, percent")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when a throughput regression "
+                         "exceeds the threshold")
+    args = ap.parse_args(argv)
+
+    path = Path(args.file)
+    if not path.exists():
+        print(f"bench-diff: {path} not found", file=sys.stderr)
+        return 0 if not args.strict else 2
+    try:
+        new = json.loads(path.read_text())
+    except ValueError as e:
+        print(f"bench-diff: unreadable {path}: {e}", file=sys.stderr)
+        return 0 if not args.strict else 2
+    if not isinstance(new, dict):
+        print(f"bench-diff: {path} is not a section map", file=sys.stderr)
+        return 0 if not args.strict else 2
+
+    old, ref = load_baseline(str(path), args.base)
+    if old is None:
+        print(f"bench-diff: no baseline at {ref}; nothing to compare")
+        return 0
+    rows = diff_sections(old, new)
+    print(f"bench-diff: {path} vs {ref}")
+    print_diff(rows)
+    regs = regressions(rows, args.threshold)
+    if regs:
+        print(f"\nWARNING: {len(regs)} throughput regression(s) beyond "
+              f"{args.threshold:.0f}% (non-blocking; timings are noisy):")
+        for r in regs:
+            print(f"  {r['section']}/{r['row']}: {r['metric']} "
+                  f"{r['old']:.4g} -> {r['new']:.4g} "
+                  f"({r['delta_pct']:+.1f}%)")
+        if args.strict:
+            return 1
+    else:
+        print("\nno throughput regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
