@@ -35,6 +35,22 @@ def timed(fn: Callable, *args, **kw) -> Tuple[Any, float]:
     return out, time.perf_counter() - t0
 
 
+def timed_best(fn: Callable, *args, repeats: int = 3, **kw
+               ) -> Tuple[Any, float]:
+    """Like :func:`timed`, but the *minimum* wall over ``repeats`` calls.
+
+    Shared-runner interference is one-sided — preemption only ever adds
+    time — so the min is the stable cross-PR estimator for steady-state
+    timings (``BENCH_engine.json`` rows).  Callers are expected to have
+    warmed/compiled ``fn`` already.
+    """
+    out, best = None, float("inf")
+    for _ in range(repeats):
+        out, dt = timed(fn, *args, **kw)
+        best = min(best, dt)
+    return out, best
+
+
 def record(name: str, rows: List[Dict[str, Any]]) -> None:
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))

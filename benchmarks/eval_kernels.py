@@ -1,0 +1,283 @@
+"""Kernel micro-benchmark rail: the search inner loop's device primitives.
+
+Three hot-path comparisons, each timed at engine-realistic shapes across
+``N in {32, 64, 128}`` and recorded as the ``kernel_hotpath`` section of
+``results/bench/BENCH_engine.json`` (so ``tools/bench_diff.py`` tracks
+kernel regressions across PRs):
+
+* **lsa** — fused Pallas LSa child-bound kernel vs the unfused einsum
+  chain (``bounds.lsa_children`` with ``use_kernel`` on/off).
+* **bma** — fused Pallas BMa branch-cost kernel vs the pure-jnp path
+  (``bounds.bma_cost_matrix``).
+* **merge** — sorted-pool frontier maintenance (child-only sort +
+  ``parallel.ops.merge_sorted_topk`` rank merge) vs the old full-pool
+  ``top_k`` pop + ``(P + B*N)`` argsort merge.
+
+On CPU the Pallas kernels execute in interpret mode (recorded in the
+``pallas`` column) — the fused-vs-unfused ratio there tracks *lowering*
+regressions, not real silicon; on TPU the same rows measure Mosaic
+kernels.  The merge rows are backend-honest everywhere (both variants are
+plain XLA).
+
+A fourth section, ``compile_cache``, measures warm-vs-cold first-call
+latency across two fresh subprocesses sharing one persistent compilation
+cache directory (``GedEngine(compile_cache_dir=...)``).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import print_table, record_section
+
+_NS = {True: (32, 64), False: (32, 64, 128)}       # quick -> sizes
+
+
+def _time(fn, *args, iters: int = 5, blocks: int = 4) -> float:
+    """Steady-state seconds per call of a jitted ``fn`` (compiles first).
+
+    ``common.timed_best`` (min over repeats — the least-interference
+    estimator for one-sided shared-runner noise) over ``blocks`` timing
+    blocks of ``iters`` back-to-back calls each.
+    """
+    import jax
+
+    from benchmarks.common import timed_best
+    jax.block_until_ready(fn(*args))               # compile + warm
+
+    def block():
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+
+    _, best = timed_best(block, repeats=blocks)
+    return best / iters
+
+
+def _pallas_mode() -> str:
+    import jax
+    if os.environ.get("REPRO_DISABLE_PALLAS", "0") == "1":
+        return "disabled"
+    return "mosaic" if jax.default_backend() == "tpu" else "interpret"
+
+
+def _packed_pair(rng, n: int):
+    """One dense random pair packed at ``slots == n`` (full occupancy)."""
+    from repro.core.engine.tensor_graphs import pack_pairs
+    from repro.data.graphs import perturb, random_graph
+
+    q = random_graph(rng, n, density=0.3, n_vlabels=5, n_elabels=3)
+    g = perturb(rng, q, 4, n_vlabels=5, n_elabels=3)
+    return pack_pairs([(q, g)], slots=n)
+
+
+def _states(rng, n: int, b: int):
+    """A batch of ``b`` random expansion states (img, level, gcost)."""
+    imgs = np.full((b, n), -1, np.int32)
+    levels = rng.integers(1, max(2, n // 2), b).astype(np.int32)
+    for i, lvl in enumerate(levels):
+        imgs[i, :lvl] = rng.permutation(n)[:lvl]
+    gcosts = (rng.integers(0, 8, b) * 0.5).astype(np.float32)
+    return imgs, levels, gcosts
+
+
+def kernel_bound_fusion(quick=True) -> List[Dict]:
+    """Fused vs unfused LSa/BMa child scoring at engine shapes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.engine import bounds as eb
+
+    rng = np.random.default_rng(7)
+    b = 8                                           # states per expansion
+    rows = []
+    for n in _NS[quick]:
+        t = _packed_pair(rng, n)
+        args = tuple(jnp.asarray(x[0]) for x in
+                     (t.qv, t.gv, t.qa, t.ga, t.order)) + (jnp.asarray(t.n[0]),)
+        imgs, levels, gcosts = (jnp.asarray(a) for a in _states(rng, n, b))
+
+        def run(kernel_fn, use_kernel):
+            @functools.partial(jax.jit, static_argnames=("uk",))
+            def f(qv, gv, qa, ga, order, nn, im, lv, gc, uk):
+                pc = eb.make_pair_consts(qv, gv, qa, ga, order, nn,
+                                         t.n_vlabels, t.n_elabels)
+
+                def one(img, level, gcost):
+                    sm = eb.state_masks(pc, img, level)
+                    return kernel_fn(pc, sm, level, gcost, uk)
+
+                return jax.vmap(one)(im, lv, gc)
+
+            return _time(lambda: f(*args, imgs, levels, gcosts, uk=use_kernel))
+
+        lsa = lambda pc, sm, level, gcost, uk: \
+            eb.lsa_children(pc, sm, level, gcost, use_kernel=uk)
+        bma = lambda pc, sm, level, gcost, uk: \
+            eb.bma_cost_matrix(pc, sm, use_kernel=uk)
+        for name, fn in (("lsa", lsa), ("bma", bma)):
+            fused_s = run(fn, True)
+            unfused_s = run(fn, False)
+            rows.append({
+                "case": f"{name}/N={n}",
+                "kernel": name, "N": n, "B": b,
+                "fused_us": fused_s * 1e6,
+                "unfused_us": unfused_s * 1e6,
+                "fused_speedup": unfused_s / fused_s,
+                "pallas": _pallas_mode(),
+            })
+    print_table("Kernel fusion: fused vs unfused child scoring", rows,
+                ["case", "B", "fused_us", "unfused_us", "fused_speedup",
+                 "pallas"])
+    return rows
+
+
+def kernel_merge_vs_argsort(quick=True) -> List[Dict]:
+    """Sorted-pool frontier step vs the old full-pool argsort merge.
+
+    Payload mirrors the engine's pool state (an ``(N,)`` int32 image per
+    entry plus level/gcost/lb/valid); both variants are vmapped over a
+    pair batch, like the real loop.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.parallel.ops import merge_sorted_topk, sort_by_key, \
+        top_k_sorted
+
+    rng = np.random.default_rng(11)
+    batch, bexp = 32, 8                            # pair batch, expand B
+    rows = []
+    for n in _NS[quick]:
+        pool = 2048 if n >= 64 else 512
+        bn = bexp * n                              # children per iteration
+
+        def payload(rows_, keys):
+            return {"img": jnp.asarray(
+                        rng.integers(0, n, (batch, rows_, n)), jnp.int32),
+                    "lb": keys / 256.0}
+
+        pool_keys = jnp.asarray(
+            np.sort(rng.random((batch, pool)), axis=1), jnp.float32)
+        ch_keys = jnp.asarray(rng.random((batch, bn)), jnp.float32)
+        pool_pl = payload(pool, pool_keys)
+        ch_pl = payload(bn, ch_keys)
+
+        @jax.jit
+        def old_step(pk, pp, ck, cp):
+            def one(pk, pimg, plb, ck, cimg, clb):
+                _, idx = top_k_sorted(-pk, bexp)   # pop: full-pool top_k
+                popped = (pimg[idx], plb[idx])
+                ak = jnp.concatenate([pk, ck])
+                ai = jnp.concatenate([pimg, cimg])
+                al = jnp.concatenate([plb, clb])
+                order = jnp.argsort(ak)            # full (P + B*N) argsort
+                keep = order[:pool]
+                return popped, ak[keep], ai[keep], al[keep], \
+                    jnp.min(al[order[pool:]])
+            return jax.vmap(one)(pk, pp["img"], pp["lb"], ck, cp["img"],
+                                 cp["lb"])
+
+        @jax.jit
+        def new_step(pk, pp, ck, cp):
+            def one(pk, pimg, plb, ck, cimg, clb):
+                popped = (pimg[:bexp], plb[:bexp])   # pop: a slice
+                rk, (rimg, rlb) = pk[bexp:], (pimg[bexp:], plb[bexp:])
+                cks, co = sort_by_key(                # keys only
+                    ck, jnp.arange(bn, dtype=jnp.int32))
+                keys, (img, lb), dropped = merge_sorted_topk(
+                    rk, cks, (rimg, rlb), (cimg, clb), pool,
+                    drop_a=rlb, drop_b=clb, perm_b=co)
+                return popped, keys, img, lb, dropped
+            return jax.vmap(one)(pk, pp["img"], pp["lb"], ck, cp["img"],
+                                 cp["lb"])
+
+        old_s = _time(lambda: old_step(pool_keys, pool_pl, ch_keys, ch_pl))
+        new_s = _time(lambda: new_step(pool_keys, pool_pl, ch_keys, ch_pl))
+        rows.append({
+            "case": f"merge/P={pool},BN={bn}",
+            "kernel": "merge", "N": n, "pool": pool, "children": bn,
+            "pairs": batch,
+            "argsort_us": old_s * 1e6,
+            "merge_us": new_s * 1e6,
+            "merge_speedup": old_s / new_s,
+        })
+    print_table("Frontier maintenance: rank merge vs full-pool argsort",
+                rows, ["case", "pairs", "argsort_us", "merge_us",
+                       "merge_speedup"])
+    return rows
+
+
+def kernel_hotpath(quick=True) -> List[Dict]:
+    """The full rail -> ``kernel_hotpath`` section of BENCH_engine.json."""
+    rows = kernel_bound_fusion(quick) + kernel_merge_vs_argsort(quick)
+    record_section("BENCH_engine", "kernel_hotpath", rows)
+    return rows
+
+
+_CACHE_PROBE = """
+import sys, time
+from repro import ged
+pairs = [(([0, 1, 1], [(0, 1, 1), (1, 2, 2)]),
+          ([0, 1, 2], [(0, 1, 1), (0, 2, 1)]))]
+eng = ged.GedEngine("jax", cache=False, pool=64, max_iters=64,
+                    compile_cache_dir=sys.argv[1])
+t0 = time.perf_counter(); eng.compute(pairs)
+first = time.perf_counter() - t0
+t0 = time.perf_counter(); eng.compute(pairs)
+steady = time.perf_counter() - t0
+s = eng.stats
+print(f"RESULT first={first} steady={steady} "
+      f"hits={s['persistent_cache_hits']} "
+      f"misses={s['persistent_cache_misses']}")
+"""
+
+
+def kernel_compile_cache(quick=True) -> List[Dict]:
+    """Warm-vs-cold first-call compile across processes.
+
+    Two fresh subprocesses run the same tiny engine workload against one
+    persistent compilation cache directory: the first pays the XLA
+    compile and serialises it, the second deserialises.  The remaining
+    warm first-call time is tracing + dispatch, which the persistent
+    cache cannot remove.
+    """
+    rows = []
+    with tempfile.TemporaryDirectory() as d:
+        for run in ("cold", "warm"):
+            env = dict(os.environ)
+            env.setdefault("JAX_PLATFORMS", "cpu")
+            root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+            env["PYTHONPATH"] = os.path.join(root, "src") + (
+                os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+            out = subprocess.run(
+                [sys.executable, "-c", _CACHE_PROBE, d],
+                capture_output=True, text=True, env=env, check=True)
+            m = re.search(r"RESULT first=(\S+) steady=(\S+) hits=(\S+) "
+                          r"misses=(\S+)", out.stdout)
+            assert m, out.stdout + out.stderr
+            rows.append({
+                "run": run,
+                "first_call_s": float(m.group(1)),
+                "steady_s": float(m.group(2)),
+                "persistent_cache_hits": float(m.group(3)),
+                "persistent_cache_misses": float(m.group(4)),
+            })
+    assert rows[0]["persistent_cache_misses"] >= 1, rows
+    assert rows[1]["persistent_cache_hits"] >= 1, rows
+    print_table("Persistent compile cache: cold vs warm process", rows,
+                ["run", "first_call_s", "steady_s",
+                 "persistent_cache_hits", "persistent_cache_misses"])
+    record_section("BENCH_engine", "compile_cache", rows)
+    return rows
+
+
+ALL = (kernel_hotpath, kernel_compile_cache)

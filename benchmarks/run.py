@@ -13,7 +13,7 @@ import argparse
 import time
 import traceback
 
-from benchmarks import eval_engine, eval_paper
+from benchmarks import eval_engine, eval_kernels, eval_paper
 from benchmarks.roofline import load as roofline_load, markdown
 
 
@@ -21,7 +21,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
-                    help="comma list: eval1..eval9, engine, kernels, roofline")
+                    help="comma list: eval1..eval9, engine, kernels, "
+                         "eval_kernels, roofline")
     args = ap.parse_args()
     quick = not args.full
     only = {s.strip() for s in args.only.split(",") if s.strip()}
@@ -52,6 +53,7 @@ def main() -> None:
                    eval_engine.engine_similarity_search,
                    eval_engine.scheduler_cost_model),
         "kernels": (eval_engine.kernel_validation,),
+        "eval_kernels": eval_kernels.ALL,
     }
     for tag, fns in engine_map.items():
         if not want(tag):

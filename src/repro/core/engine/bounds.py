@@ -93,8 +93,18 @@ def child_exact_delta(pc: PairConsts, sm: StateMasks) -> jnp.ndarray:
 
 
 def lsa_children(pc: PairConsts, sm: StateMasks, level: jnp.ndarray,
-                 g_cost: jnp.ndarray) -> jnp.ndarray:
-    """delta^LSa(f u {v_i -> u}) for every u; +BIG where u is not free."""
+                 g_cost: jnp.ndarray, use_kernel: bool = False
+                 ) -> jnp.ndarray:
+    """delta^LSa(f u {v_i -> u}) for every u; +BIG where u is not free.
+
+    ``use_kernel=True`` routes the (N, N)-shaped work — inner-edge
+    upsilons, per-(anchor, u) cross adjustments, exact-delta edge
+    mismatches — through the fused Pallas kernel
+    (``kernels/lsa_children.py``); only cheap (N, Le)-sized histogram
+    contractions and row gathers run as XLA ops outside it.  Both paths
+    compute the identical bound (small-half float arithmetic is exact, so
+    re-association cannot change a bit — asserted by the parity tests).
+    """
     N = pc.qv.shape[0]
     lv_bins = pc.n_vlabels + 2
 
@@ -108,6 +118,29 @@ def lsa_children(pc: PairConsts, sm: StateMasks, level: jnp.ndarray,
     # removing label gv[u] from the g side
     surplus_u = (hg_v - hq_v)[pc.gv]             # (N,)
     ups_v = max_v - (inter_v - (surplus_u <= 0).astype(jnp.float32))
+
+    if use_kernel:
+        # Pre-reduced histograms: (N, Le) contractions + row gathers; the
+        # (N, N)-shaped accumulation loops stay fused inside the kernel.
+        rowhist_g = jnp.einsum("luw,w->ul", pc.oh_g, sm.free_g)   # (N, Le)
+        rowhist_q2 = jnp.einsum("lvw,w->vl", pc.oh_q, sm.free_q2)
+        hq_i = 0.5 * jnp.einsum("vl,v->l", rowhist_q2, sm.free_q2)
+        hg_i = 0.5 * jnp.einsum("ul,u->l", rowhist_g, sm.free_g)
+        cq = rowhist_q2[pc.order]                 # (N pos, Le)
+        cg = rowhist_g[sm.img_cl]
+        s1 = jnp.sum(cq, axis=1)
+        s2 = jnp.sum(cg, axis=1)
+        inter_j = jnp.sum(jnp.minimum(cq, cg), axis=1)
+        base_j = jnp.maximum(s1, s2) - inter_j
+        adjb_j = jnp.maximum(s1, s2 - 1.0) - inter_j
+        a_ju = pc.ga[sm.img_cl]                   # (N pos, N u)
+        qrow = pc.qa_ord[sm.vi]
+        cq_vi = rowhist_q2[sm.vi]
+        dv = (pc.qv[sm.vi] != pc.gv).astype(jnp.float32)
+        base = g_cost + dv + ups_v
+        return kops.lsa_children(base, sm.free_g, rowhist_g, a_ju, qrow,
+                                 sm.pos_anch, cq, cg, base_j, adjb_j,
+                                 hq_i, hg_i, cq_vi)
 
     # ---- inner edges --------------------------------------------------------
     hq_i = 0.5 * jnp.einsum("lvw,v,w->l", pc.oh_q, sm.free_q2, sm.free_q2)

@@ -1,22 +1,39 @@
 """Device-resident frontier search (the tensorised Alg. 2).
 
 One ``lax.while_loop`` per pair (``vmap``-ed across pairs) owns a fixed
-capacity pool of search states.  Per iteration:
+capacity pool of search states kept **sorted by the strategy pop key**
+(AStar+: ``(lb, -level)``; DFS+: ``(-level, lb)`` — the paper's pop rule
+as a scalar key).  Per iteration:
 
-  1. **pop**: ``top_k`` the ``expand`` best states by the strategy key
-     (AStar+: ``(lb, -level)``; DFS+: ``(-level, lb)`` — the paper's pop rule
-     as a scalar key).
+  1. **pop**: the best ``expand`` states are the first ``B`` rows of the
+     sorted pool — a free static slice, no per-iteration ``top_k``.
   2. **expand**: score all children of each popped state at once (LSa via
-     histogram algebra, BMa via one auction + dual forced bounds — Alg. 3/4).
+     histogram algebra, BMa via one auction + dual forced bounds — Alg. 3/4;
+     both Pallas-fused under ``EngineConfig.use_kernel``).
   3. **bound**: update the incumbent from (a) exact leaf children and (b) the
      greedy-primal full-mapping extension (Alg. 2 line 13).
-  4. **merge**: keep the best ``pool`` states; remember the smallest lower
-     bound ever dropped — the result is certified **exact** iff the final
-     answer is <= that floor (it is, for paper-scale inputs; overflowing
-     pairs are re-queued to the exact host solver by the serving layer).
+  4. **merge**: sort only the ``B*N`` children, then rank-merge the two
+     sorted runs (surviving pool + children) and truncate to ``pool``
+     rows (``parallel.ops.merge_sorted_topk``) — no full-pool ``argsort``.
+     The smallest lower bound ever dropped is remembered — the result is
+     certified **exact** iff the final answer is <= that floor (it is, for
+     paper-scale inputs; overflowing pairs are re-queued to the exact host
+     solver by the serving layer).
 
-Verification mode initialises the incumbent to ``tau + 0.5`` and stops early
-on accept (incumbent <= tau) or reject (pool min lb > tau) — paper §5.3.
+States whose lower bound has been overtaken by the incumbent are pruned
+*lazily* (the old loop bulk-invalidated them at every merge, which a sorted
+pool cannot do without re-sorting): they are discarded at pop time (Alg. 2
+line 6), and when truncation drops them they are excluded from the floor —
+exactly the old accounting.  Under the AStar+ key they sort to the tail and
+fall off first; under the DFS+ key (depth-first) stale deep states sort to
+the *head*, so they drain through the next pops instead — at worst they
+occupy pool slots for a few iterations, which on a near-capacity DFS pool
+can evict (and floor-account) shallow states the eager-pruning loop would
+have kept.  That only makes the certificate more conservative, never
+unsound: ``exact`` still means the answer is at or below every unexplored
+bound ever discarded.  Verification mode initialises the incumbent to
+``tau + 0.5`` and stops early on accept (incumbent <= tau) or reject (pool
+min lb > tau) — paper §5.3.
 """
 
 from __future__ import annotations
@@ -29,7 +46,7 @@ import jax.numpy as jnp
 
 from repro.core.engine import bounds as eb
 from repro.core.engine.tensor_graphs import GraphPairTensors
-from repro.parallel.ops import top_k_sorted
+from repro.parallel.ops import merge_sorted_topk, sort_by_key
 
 INF = 3.0e8
 BIG = eb.BIG
@@ -81,7 +98,8 @@ def _expand_one(pc: eb.PairConsts, cfg: EngineConfig, img, level, gcost,
 
     lb_parts = []
     if cfg.bound in ("lsa", "hybrid"):
-        lb_parts.append(eb.lsa_children(pc, sm, level, gcost))
+        lb_parts.append(eb.lsa_children(pc, sm, level, gcost,
+                                        use_kernel=cfg.use_kernel))
     if cfg.bound in ("bma", "hybrid"):
         bma = eb.bma_children(pc, sm, img, level, gcost, cfg.sweeps,
                               use_kernel=cfg.use_kernel)
@@ -133,22 +151,19 @@ def run_pair(pair: Tuple, cfg: EngineConfig, tau: jnp.ndarray,
 
     def body(c: Carry) -> Carry:
         pool = c.pool
-        keys = _pop_key(cfg, pool.lb, pool.level, pool.valid, n)
-        # sort-based top-k: lax.top_k is an SPMD-opaque custom-call that
-        # all-gathers the vmapped pair batch (see parallel/ops.py)
-        neg_top, idx = top_k_sorted(-keys, B)                # best B states
-        sel_valid = (-neg_top) < INF / 2
-        sel_img = pool.img[idx]
-        sel_level = pool.level[idx]
-        sel_gcost = pool.gcost[idx]
-        sel_lb = pool.lb[idx]
+        # ---- pop: the pool is key-sorted, so the best B states are the
+        # first B rows — a free static slice, no top_k / per-pool sort.
+        sel_img = pool.img[:B]
+        sel_level = pool.level[:B]
+        sel_gcost = pool.gcost[:B]
+        sel_lb = pool.lb[:B]
         # prune-at-pop (Alg. 2 line 6)
-        sel_valid = sel_valid & (sel_lb < c.ub)
+        sel_valid = pool.valid[:B] & (sel_lb < c.ub)
 
-        # invalidate popped slots
-        popped = jnp.zeros((P,), bool).at[idx].set(sel_valid | ((-neg_top) < INF / 2))
-        pool = pool._replace(valid=pool.valid & ~popped,
-                             lb=jnp.where(popped, INF, pool.lb))
+        # the unpopped remainder (rows B..P) stays sorted: nothing below
+        # mutates its fields, so its keys are unchanged since the last merge
+        rem = PoolState(pool.img[B:], pool.level[B:], pool.gcost[B:],
+                        pool.lb[B:], pool.valid[B:])
 
         # ---- expand ---------------------------------------------------------
         clb, cgc, heur_img, heur_cost = expand_v(
@@ -192,29 +207,39 @@ def run_pair(pair: Tuple, cfg: EngineConfig, tau: jnp.ndarray,
         ch_valid = ins_mask.reshape(-1)
 
         # ---- merge: keep best P by pop key ----------------------------------
-        all_img = jnp.concatenate([pool.img, ch_img], axis=0)
-        all_level = jnp.concatenate([pool.level, ch_level])
-        all_gcost = jnp.concatenate([pool.gcost, ch_gcost])
-        all_lb = jnp.concatenate([pool.lb, ch_lb])
-        all_valid = jnp.concatenate([pool.valid & (pool.lb < new_ub), ch_valid])
-        all_keys = _pop_key(cfg, all_lb, all_level, all_valid, n)
-        order_idx = jnp.argsort(all_keys)
-        keep = order_idx[:P]
-        drop = order_idx[P:]
-        new_pool = PoolState(all_img[keep], all_level[keep], all_gcost[keep],
-                             jnp.where(all_valid[keep], all_lb[keep], INF),
-                             all_valid[keep])
-        dropped_lbs = jnp.where(all_valid[drop], all_lb[drop], INF)
-        new_floor = jnp.minimum(c.floor, jnp.min(dropped_lbs))
+        # Only the B*N child *keys* are sorted; the remainder run is already
+        # sorted (invariant), so the merge is two binary-search rank passes
+        # + one payload gather instead of a full (P + B*N) argsort.  The
+        # child payload rows never pre-sort: the sort permutation composes
+        # into the merge's source-index map (perm_b).
+        ch = PoolState(ch_img, ch_level, ch_gcost, ch_lb, ch_valid)
+        ch_keys = _pop_key(cfg, ch_lb, ch_level, ch_valid, n)
+        ch_keys, ch_order = sort_by_key(
+            ch_keys, jnp.arange(B * N, dtype=jnp.int32))
+        rem_keys = _pop_key(cfg, rem.lb, rem.level, rem.valid, n)
+        # Floor accounting matches the old bulk-pruning merge exactly:
+        # dropped states whose bound the incumbent already beat (lb >=
+        # new_ub) contribute nothing — they are discarded as pruned, not
+        # as unexplored.  (Children are pre-filtered by ins_mask, so
+        # their lb is < new_ub wherever valid.)
+        _, kept, dropped_lb = merge_sorted_topk(
+            rem_keys, ch_keys, rem, ch, P,
+            drop_a=jnp.where(rem.valid & (rem.lb < new_ub), rem.lb, INF),
+            drop_b=jnp.where(ch.valid, ch.lb, INF),
+            perm_b=ch_order)
+        new_pool = kept._replace(lb=jnp.where(kept.valid, kept.lb, INF))
+        new_floor = jnp.minimum(c.floor, dropped_lb)
 
         # ---- termination -----------------------------------------------------
         min_lb = jnp.min(jnp.where(new_pool.valid, new_pool.lb, INF))
         it = c.it + 1
         exhausted = min_lb >= INF / 2
-        if cfg.strategy == "astar":
-            opt_done = min_lb >= new_ub
-        else:
-            opt_done = exhausted
+        # min_lb >= ub means every remaining state is prunable (Alg. 2
+        # line 6 would discard each at pop), i.e. the incumbent is optimal.
+        # The pre-sorted-pool loop reached the same stop by bulk-invalidating
+        # lb >= ub entries at merge time; pruning is lazy now (at pop and by
+        # tail truncation), so both strategies stop on the bound condition.
+        opt_done = min_lb >= new_ub
         done = exhausted | opt_done | (it >= cfg.max_iters)
         if verification:
             done = done | (new_ub <= tau) | (jnp.minimum(min_lb, new_floor) > tau)

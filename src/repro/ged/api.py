@@ -31,7 +31,9 @@ import numpy as np
 
 from repro.core.engine.search import EngineConfig
 from repro.ged.backends import Backend, make_backend
-from repro.ged.exec import DIGESTS, ResultCache, detached, pair_key
+from repro.ged.exec import (DIGESTS, ResultCache, detached,
+                            enable_compile_cache, pair_key,
+                            persistent_cache_stats)
 from repro.ged.plan import Vocab, as_pairs, build_plan
 from repro.ged.results import GedOutcome
 
@@ -70,6 +72,14 @@ class GedEngine:
     cache : keep an engine-level result cache (default True): duplicate
         pairs — within one batch or across calls — are answered from the
         cache instead of re-executing.  ``cache_size`` bounds it (LRU).
+    compile_cache_dir : directory for jax's *persistent* compilation
+        cache (default: the ``REPRO_GED_COMPILE_CACHE_DIR`` environment
+        variable; unset means off).  Compiled engine executables are
+        serialised there and re-loaded by later processes, so the
+        multi-second first-call compile is paid once per machine rather
+        than once per process.  Process-global (jax has one cache);
+        hit/miss/entry counters appear in :attr:`stats` as
+        ``persistent_cache_*``.
     digest : graph-hash family for the result-cache keys.  ``"exact"``
         (default) keys on byte-identical graphs, so cached mappings stay
         index-compatible; ``"wl"`` keys on Weisfeiler-Leman canonical
@@ -110,6 +120,7 @@ class GedEngine:
                  max_in_flight: int = 4,
                  cache: bool = True,
                  cache_size: int = 4096,
+                 compile_cache_dir: Optional[str] = None,
                  digest: str = "exact",
                  config: Optional[EngineConfig] = None,
                  **config_overrides):
@@ -120,6 +131,7 @@ class GedEngine:
             raise ValueError(f"unknown digest {digest!r}; "
                              f"expected one of {sorted(DIGESTS)}")
         self.digest = digest
+        self.compile_cache_dir = enable_compile_cache(compile_cache_dir)
         if config is None:
             config = EngineConfig(**{"use_kernel": False, **config_overrides})
         elif config_overrides:
@@ -271,6 +283,7 @@ class GedEngine:
             out["result_cache_hits"] = self._cache.hits
             out["result_cache_misses"] = self._cache.misses
             out["result_cache_entries"] = len(self._cache)
+        out.update(persistent_cache_stats())
         return out
 
     # --------------------------------------------------------- internal

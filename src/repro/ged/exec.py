@@ -11,9 +11,12 @@ a packed bucket actually reaches silicon lives here:
   device mesh's batch axes (``pod`` x ``data`` per
   :func:`repro.parallel.sharding.default_rules`), with bucket batches
   padded to shard multiples by :mod:`repro.ged.plan`.  The search's
-  sort-based ``top_k_sorted`` path keeps the pair batch sharded (the
-  ``lax.top_k`` custom-call would all-gather it — see
-  ``repro/parallel/ops.py``).
+  sorted-pool loop is built from batch-partitionable HLO — ``lax.sort``
+  over the child keys, binary-search rank merges, gathers with explicit
+  batch dims — so the pair batch stays sharded (a ``lax.top_k``
+  custom-call would all-gather it — see ``repro/parallel/ops.py``).
+  One-shard meshes skip ``shard_map`` entirely (the single-device fast
+  path).
 * :class:`PendingBatch` — the future returned by
   :meth:`Executor.run_packed_async`: a dispatched-but-not-yet-drained
   engine invocation, riding JAX's async dispatch.  The overlapped ``auto``
@@ -32,6 +35,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import os
 from typing import Dict, Optional, Sequence
 
 import numpy as np
@@ -41,6 +45,86 @@ from repro.core.engine.search import EngineConfig
 from repro.core.exact.graph import Graph
 from repro.ged.plan import Bucket, CompileCache, Vocab, pack_bucket
 from repro.ged.results import GedOutcome, engine_mapping
+
+
+# ------------------------------------------------- persistent compile cache
+
+COMPILE_CACHE_ENV = "REPRO_GED_COMPILE_CACHE_DIR"
+
+# Process-wide persistent-cache state: the enabled directory plus hit/miss
+# counters fed by jax's monitoring events.  jax's compilation cache is a
+# process-global switch, so this is module state rather than per-executor —
+# every engine in the process shares the one cache (that is the point: the
+# multi-second engine compile is paid once per *machine*, not per process).
+# ``listener`` tracks the (unremovable) monitoring-listener registration
+# separately from ``dir`` so disabling and re-enabling the cache can never
+# register a second listener and double-count events.
+_PERSISTENT_CACHE: Dict[str, object] = {"dir": None, "hits": 0, "misses": 0,
+                                        "listener": False}
+
+
+def _cache_event_listener(event: str, **kw) -> None:
+    if event == "/jax/compilation_cache/cache_hits":
+        _PERSISTENT_CACHE["hits"] += 1          # type: ignore[operator]
+    elif event == "/jax/compilation_cache/cache_misses":
+        _PERSISTENT_CACHE["misses"] += 1        # type: ignore[operator]
+
+
+def enable_compile_cache(cache_dir: Optional[str] = None) -> Optional[str]:
+    """Point jax's persistent compilation cache at ``cache_dir``.
+
+    ``cache_dir`` defaults to the ``REPRO_GED_COMPILE_CACHE_DIR``
+    environment variable; when neither is set this is a no-op returning
+    ``None``.  Compiled engine executables are serialised into the
+    directory and re-loaded by *later processes*, so the multi-second
+    first-call compile is paid once per machine.  Idempotent — repeat
+    calls (every ``GedEngine(compile_cache_dir=...)``) just re-point the
+    directory.  Hit/miss counts land in :func:`persistent_cache_stats`
+    (and therefore ``engine.stats``).
+
+    >>> enable_compile_cache(None) is None     # no dir, no env: no-op
+    True
+    """
+    path = cache_dir or os.environ.get(COMPILE_CACHE_ENV)
+    if not path:
+        return None
+    import jax
+    from jax import monitoring
+    if not _PERSISTENT_CACHE["listener"]:
+        monitoring.register_event_listener(_cache_event_listener)
+        _PERSISTENT_CACHE["listener"] = True
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", str(path))
+    # the engine's jit is exactly the compile worth persisting — don't let
+    # the default 1s threshold skip mid-sized bucket shapes
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    if _PERSISTENT_CACHE["dir"] != str(path):
+        # jax latches its cache-enabled check at the first compile of the
+        # process; (re-)pointing the directory afterwards needs an explicit
+        # reset or the new setting is silently ignored
+        from jax.experimental.compilation_cache import compilation_cache
+        compilation_cache.reset_cache()
+    _PERSISTENT_CACHE["dir"] = str(path)
+    return str(path)
+
+
+def persistent_cache_stats() -> Dict[str, float]:
+    """Process-wide persistent compile-cache counters (empty when off).
+
+    ``persistent_cache_hits`` / ``persistent_cache_misses`` count jax's
+    disk-cache lookups this process; ``persistent_cache_entries`` is the
+    number of serialised executables currently in the directory.
+    """
+    d = _PERSISTENT_CACHE["dir"]
+    if d is None:
+        return {}
+    try:
+        entries = len(os.listdir(str(d)))
+    except OSError:
+        entries = 0
+    return {"persistent_cache_hits": float(_PERSISTENT_CACHE["hits"]),
+            "persistent_cache_misses": float(_PERSISTENT_CACHE["misses"]),
+            "persistent_cache_entries": float(entries)}
 
 
 # ---------------------------------------------------------------- executors
@@ -205,6 +289,12 @@ class ShardedExecutor(Executor):
         mesh = jax.make_mesh((8,), ("data",))
         eng = ged.GedEngine("sharded", mesh=mesh)   # batches padded to 8
 
+    On a one-shard mesh (one local device) the ``shard_map`` wrapper and
+    shard-multiple batch padding are pure overhead — there is nothing to
+    partition — so dispatch falls through to the plain single-device path
+    (``stats["single_device_fastpath"]`` counts those dispatches) and
+    ``batch_multiple`` stays 1.  Outcomes are identical either way.
+
     >>> ShardedExecutor().batch_multiple >= 1      # local device count
     True
     """
@@ -221,6 +311,7 @@ class ShardedExecutor(Executor):
             from repro.parallel.sharding import pairs_axes
             axes = pairs_axes(mesh)
         self.axes = tuple(axes)
+        self.stats["single_device_fastpath"] = 0
         self._fns: Dict[tuple, object] = {}
 
     @property
@@ -231,6 +322,13 @@ class ShardedExecutor(Executor):
     def _dispatch(self, packed, taus, cfg, verification):
         import jax
         import jax.numpy as jnp
+
+        if self.batch_multiple == 1:
+            # one shard = nothing to partition: skip the shard_map wrapper
+            # (and its trace/lowering overhead) entirely
+            self.stats["single_device_fastpath"] += 1
+            return engine_api.dispatch_packed(packed, taus, cfg,
+                                              verification)
 
         key = (cfg, bool(verification), packed.n_vlabels, packed.n_elabels)
         fn = self._fns.get(key)

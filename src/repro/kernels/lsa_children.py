@@ -1,0 +1,154 @@
+"""Pallas kernel: fused delta^LSa child-bound vector (B, N).
+
+The other half of the expansion hot path (the BMa half is
+``bma_cost_matrix.py``): for every popped search state the engine scores
+*all* children ``v_i -> u`` with the label-set anchor-aware bound — vertex
+surplus, inner-edge histogram upsilons, per-anchor cross-term adjustments
+and v_i's own cross component.
+
+Unfused, the cross terms materialise a ``(pos, u, Le)`` one-hot ``aoh``
+tensor plus half a dozen ``(N, N)``-shaped einsum intermediates per state,
+each round-tripping HBM.  The kernel takes the *pre-reduced* histograms —
+``(N, Le)``-sized contractions the engine computes with cheap matmuls —
+and accumulates every per-``u`` reduction in VMEM, writing the single
+``(B, N)`` bound vector once.
+
+TPU mapping notes: the candidate axis ``u`` is tiled to the 128-lane VPU
+axis; reductions over ``Le`` (edge labels) and ``N`` (anchor positions)
+are ``fori_loop``s over VMEM-resident slices.  Working set per grid step:
+the ``(N, TU)`` anchor-label tile (int32) plus four ``(N, TU)`` f32
+accumulators and the ``(TU, Le)``/``(N, Le)`` histograms — about 380 KiB
+at N = TU = 128, Le = 8, comfortably inside the ~16 MiB VMEM budget (see
+docs/kernels.md for the full table).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e7
+
+
+def _kernel(base_ref, free_g_ref, rowhist_g_ref, a_ju_ref, qrow_ref,
+            pa_ref, cq_ref, cg_ref, base_j_ref, adjb_j_ref, hq_i_ref,
+            hg_i_ref, cq_vi_ref, out_ref):
+    # Tile shapes: base/free_g (1, TU), rowhist_g (1, TU, Le),
+    # a_ju (1, N, TU), qrow/pa/base_j/adjb_j (1, N), cq/cg (1, N, Le),
+    # hq_i/hg_i/cq_vi (1, Le) -> out (1, TU).
+    base = base_ref[0]          # (TU,)
+    free_g = free_g_ref[0]      # (TU,)
+    rg = rowhist_g_ref[0]       # (TU, Le)
+    a_ju = a_ju_ref[0]          # (N, TU)
+    qrow = qrow_ref[0]          # (N,)
+    pa = pa_ref[0]              # (N,)
+    cq = cq_ref[0]              # (N, Le)
+    cg = cg_ref[0]              # (N, Le)
+    base_j = base_j_ref[0]      # (N,)
+    adjb_j = adjb_j_ref[0]      # (N,)
+    hq_i = hq_i_ref[0]          # (Le,)
+    hg_i = hg_i_ref[0]          # (Le,)
+    cq_vi = cq_vi_ref[0]        # (Le,)
+
+    tu, le = rg.shape
+    n = a_ju.shape[0]
+
+    # ---- inner edges + v_i cross: one pass over edge labels -------------
+    def label_body(l, accs):
+        inter_i, inter_vi = accs
+        rgl = rg[:, l]                                   # (TU,)
+        inter_i = inter_i + jnp.minimum(hq_i[l], hg_i[l] - rgl)
+        inter_vi = inter_vi + jnp.minimum(cq_vi[l], rgl)
+        return inter_i, inter_vi
+
+    zeros = jnp.zeros((tu,), dtype=jnp.float32)
+    inter_i, inter_vi = jax.lax.fori_loop(0, le, label_body, (zeros, zeros))
+    n_i1 = jnp.sum(hq_i)
+    n_i2 = (jnp.sum(hg_i) - jnp.sum(rg, axis=1))         # (TU,)
+    ups_i = jnp.maximum(n_i1, n_i2) - inter_i
+    s1_vi = jnp.sum(cq_vi)
+    s2_u = jnp.sum(rg, axis=1)
+    ups_vi = jnp.maximum(s1_vi, s2_u) - inter_vi
+
+    # ---- anchor cross terms: gather cq/cg at each (j, u)'s edge label ---
+    # cg_at[j, u] = cg[j, a_ju[j, u] - 1] (0 where no edge), built as an
+    # Le-step accumulation instead of the (pos, u, Le) one-hot einsum.
+    def at_body(l, accs):
+        cg_at, cq_at = accs
+        m = (a_ju == l + 1).astype(jnp.float32)          # (N, TU)
+        cg_at = cg_at + m * cg[:, l][:, None]
+        cq_at = cq_at + m * cq[:, l][:, None]
+        return cg_at, cq_at
+
+    zeros_nu = jnp.zeros((n, tu), dtype=jnp.float32)
+    cg_at, cq_at = jax.lax.fori_loop(0, le, at_body, (zeros_nu, zeros_nu))
+    d_ju = (cg_at <= cq_at).astype(jnp.float32)
+    ups_ju = jnp.where(a_ju > 0, adjb_j[:, None] + d_ju, base_j[:, None])
+    cross = jnp.sum(ups_ju * pa[:, None], axis=0)        # (TU,)
+
+    # ---- exact-delta edge mismatches of (v_i -> u) ----------------------
+    mism = (qrow[:, None] != a_ju).astype(jnp.float32)
+    de = jnp.sum(mism * pa[:, None], axis=0)             # (TU,)
+
+    lb = base + de + ups_i + ups_vi + cross
+    out_ref[0] = jnp.where(free_g > 0, lb, BIG)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_u", "interpret"))
+def lsa_children_pallas(
+    base: jnp.ndarray,       # (B, N) f32
+    free_g: jnp.ndarray,     # (B, N) f32
+    rowhist_g: jnp.ndarray,  # (B, N, Le) f32
+    a_ju: jnp.ndarray,       # (B, N, N) int32
+    qrow: jnp.ndarray,       # (B, N) int32
+    pos_anch: jnp.ndarray,   # (B, N) f32
+    cq: jnp.ndarray,         # (B, N, Le) f32
+    cg: jnp.ndarray,         # (B, N, Le) f32
+    base_j: jnp.ndarray,     # (B, N) f32
+    adjb_j: jnp.ndarray,     # (B, N) f32
+    hq_i: jnp.ndarray,       # (B, Le) f32
+    hg_i: jnp.ndarray,       # (B, Le) f32
+    cq_vi: jnp.ndarray,      # (B, Le) f32
+    tile_u: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, n = base.shape
+    le = rowhist_g.shape[-1]
+    # default tile: the largest power-of-two divisor of n up to the 128
+    # VPU lanes — power-of-two slot buckets get 128 (or n), while pinned
+    # odd slot counts still trace instead of tripping the divisibility
+    # assert (an explicit tile_u must divide n)
+    tu = tile_u or math.gcd(n, 128)
+    assert n % tu == 0, (n, tu)
+    grid = (b, n // tu)
+    full_n = pl.BlockSpec((1, n), lambda b, j: (b, 0))
+    full_le = pl.BlockSpec((1, le), lambda b, j: (b, 0))
+    full_nle = pl.BlockSpec((1, n, le), lambda b, j: (b, 0, 0))
+    tile = pl.BlockSpec((1, tu), lambda b, j: (b, j))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            tile,                                         # base
+            tile,                                         # free_g
+            pl.BlockSpec((1, tu, le), lambda b, j: (b, j, 0)),  # rowhist_g
+            pl.BlockSpec((1, n, tu), lambda b, j: (b, 0, j)),   # a_ju
+            full_n,                                       # qrow
+            full_n,                                       # pos_anch
+            full_nle,                                     # cq
+            full_nle,                                     # cg
+            full_n,                                       # base_j
+            full_n,                                       # adjb_j
+            full_le,                                      # hq_i
+            full_le,                                      # hg_i
+            full_le,                                      # cq_vi
+        ],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(base, free_g, rowhist_g, a_ju, qrow, pos_anch, cq, cg, base_j,
+      adjb_j, hq_i, hg_i, cq_vi)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.bma_cost_matrix import bma_cost_matrix_pallas
+from repro.kernels.lsa_children import lsa_children_pallas
 from repro.kernels.reduced_top2 import reduced_top2_pallas
 
 
@@ -51,6 +52,26 @@ def bma_cost_matrix(qv, gv, inner_q, inner_g, qa_ord, ga, img_cl, pos_anch):
         out = ref.bma_cost_matrix_ref(*args)
     else:
         out = bma_cost_matrix_pallas(*args, interpret=_interpret())
+    return out[0] if unbatched else out
+
+
+def lsa_children(base, free_g, rowhist_g, a_ju, qrow, pos_anch, cq, cg,
+                 base_j, adjb_j, hq_i, hg_i, cq_vi):
+    """Fused delta^LSa child-bound vector; operands may be batched or not.
+
+    Operands are the pre-reduced histograms ``bounds.lsa_children``
+    extracts with (N, Le)-sized contractions and gathers — the kernel
+    body stays gather-free (see ``kernels/lsa_children.py``).
+    """
+    args = [base, free_g, rowhist_g, a_ju, qrow, pos_anch, cq, cg,
+            base_j, adjb_j, hq_i, hg_i, cq_vi]
+    unbatched = base.ndim == 1
+    if unbatched:
+        args = [x[None] for x in args]
+    if _disabled():
+        out = ref.lsa_children_ref(*args)
+    else:
+        out = lsa_children_pallas(*args, interpret=_interpret())
     return out[0] if unbatched else out
 
 

@@ -55,3 +55,60 @@ def reduced_top2_ref(cost: jnp.ndarray, prices: jnp.ndarray):
 def hist_intersect_ref(hq: jnp.ndarray, hg: jnp.ndarray) -> jnp.ndarray:
     """Pairwise histogram-intersection sizes: (B, Nq, L) x (B, Nu, L) -> (B, Nq, Nu)."""
     return jnp.sum(jnp.minimum(hq[:, :, None, :], hg[:, None, :, :]), axis=3)
+
+
+def lsa_children_ref(
+    base: jnp.ndarray,       # (B, N) f32 — g_cost + vertex-label terms per u
+    free_g: jnp.ndarray,     # (B, N) f32 — 1.0 where u is a free g vertex
+    rowhist_g: jnp.ndarray,  # (B, N, Le) f32 — free-neighbour edge hists of g
+    a_ju: jnp.ndarray,       # (B, N, N) int32 — ga[img_j, u] (pos x u)
+    qrow: jnp.ndarray,       # (B, N) int32 — qa_ord[v_i] (q edges of v_i by pos)
+    pos_anch: jnp.ndarray,   # (B, N) f32 — 1.0 where position j is anchored
+    cq: jnp.ndarray,         # (B, N, Le) f32 — anchored-q cross hists by pos
+    cg: jnp.ndarray,         # (B, N, Le) f32 — anchored-g cross hists by pos
+    base_j: jnp.ndarray,     # (B, N) f32 — max(s1, s2) - inter per pos
+    adjb_j: jnp.ndarray,     # (B, N) f32 — max(s1, s2 - 1) - inter per pos
+    hq_i: jnp.ndarray,       # (B, Le) f32 — free-inner edge hist of q
+    hg_i: jnp.ndarray,       # (B, Le) f32 — free-inner edge hist of g
+    cq_vi: jnp.ndarray,      # (B, Le) f32 — v_i's free-neighbour edge hist
+) -> jnp.ndarray:
+    """delta^LSa child-bound vector (B, N): +BIG where u is not free.
+
+    The semantics of record for ``kernels/lsa_children.py``.  Operands are
+    the pre-reduced histograms ``bounds.lsa_children`` extracts with cheap
+    (N, Le)-sized contractions; everything (N, N)-shaped or bigger — the
+    inner-edge upsilon per candidate u, the per-(anchor, u) cross-term
+    adjustments (the old ``(pos, u, Le)`` one-hot ``aoh`` intermediate),
+    and the exact-delta edge mismatches — happens here / in the kernel.
+    """
+    # ---- inner edges: remove u's incident free edges from the g side ----
+    hg_i_u = hg_i[:, None, :] - rowhist_g                    # (B, N u, Le)
+    n_i1 = jnp.sum(hq_i, axis=1)                             # (B,)
+    n_i2 = jnp.sum(hg_i_u, axis=2)                           # (B, N)
+    inter_i = jnp.sum(jnp.minimum(hq_i[:, None, :], hg_i_u), axis=2)
+    ups_i = jnp.maximum(n_i1[:, None], n_i2) - inter_i
+
+    # ---- v_i's own cross component --------------------------------------
+    s1_vi = jnp.sum(cq_vi, axis=1)                           # (B,)
+    s2_u = jnp.sum(rowhist_g, axis=2)                        # (B, N)
+    inter_vi = jnp.sum(jnp.minimum(cq_vi[:, None, :], rowhist_g), axis=2)
+    ups_vi = jnp.maximum(s1_vi[:, None], s2_u) - inter_vi
+
+    # ---- old-anchor cross terms -----------------------------------------
+    le = hq_i.shape[1]
+    labels = jnp.arange(1, le + 1, dtype=jnp.int32)
+    aoh = (a_ju[:, :, :, None] == labels).astype(jnp.float32)  # (B,pos,u,Le)
+    cg_at = jnp.einsum("bjul,bjl->bju", aoh, cg)
+    cq_at = jnp.einsum("bjul,bjl->bju", aoh, cq)
+    d_ju = (cg_at <= cq_at).astype(jnp.float32)
+    ups_ju = jnp.where(a_ju > 0, adjb_j[:, :, None] + d_ju,
+                       base_j[:, :, None])                   # (B, pos, u)
+    cross = jnp.einsum("bju,bj->bu", ups_ju, pos_anch)
+
+    # ---- exact-delta edge mismatches of (v_i -> u) ----------------------
+    de = jnp.einsum(
+        "bju,bj->bu",
+        (qrow[:, :, None] != a_ju).astype(jnp.float32), pos_anch)
+
+    lb = base + de + ups_i + ups_vi + cross
+    return jnp.where(free_g > 0, lb, BIG)

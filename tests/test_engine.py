@@ -127,12 +127,49 @@ def test_engine_certificate_detects_truncation():
     assert not np.any(wrong & out["exact"]), (out["ged"], want, out["exact"])
 
 
-def test_engine_kernel_and_reference_paths_agree():
+@pytest.mark.parametrize("strategy", ["astar", "dfs"])
+@pytest.mark.parametrize("bound", ["lsa", "hybrid"])
+def test_engine_kernel_and_reference_paths_bit_identical(strategy, bound):
+    """use_kernel=True/False must produce bit-identical engine outputs —
+    every field, not just the distance: the fused kernels compute the very
+    same bound values (small-half float arithmetic is exact), so the whole
+    search trajectory must match."""
     pairs = _make_pairs(23, 6)
     t = pack_pairs(pairs, slots=16)
-    out_k = ged_batch(t, EngineConfig(pool=256, expand=4, use_kernel=True))
-    out_r = ged_batch(t, EngineConfig(pool=256, expand=4, use_kernel=False))
-    assert np.array_equal(out_k["ged"], out_r["ged"])
+    base = dict(pool=256, expand=4, bound=bound, strategy=strategy)
+    out_k = ged_batch(t, EngineConfig(use_kernel=True, **base))
+    out_r = ged_batch(t, EngineConfig(use_kernel=False, **base))
+    assert set(out_k) == set(out_r)
+    for key in out_k:
+        assert np.array_equal(out_k[key], out_r[key]), (strategy, bound, key)
+
+
+@pytest.mark.parametrize("strategy", ["astar", "dfs"])
+def test_engine_kernel_paths_bit_identical_verification(strategy):
+    pairs = _make_pairs(27, 6)
+    t = pack_pairs(pairs, slots=16)
+    taus = np.asarray([2.0, 3.0, 2.0, 4.0, 1.0, 3.0], np.float32)
+    base = dict(pool=256, expand=4, strategy=strategy)
+    out_k = verify_batch(t, taus, EngineConfig(use_kernel=True, **base))
+    out_r = verify_batch(t, taus, EngineConfig(use_kernel=False, **base))
+    assert set(out_k) == set(out_r)
+    for key in out_k:
+        assert np.array_equal(out_k[key], out_r[key]), (strategy, key)
+
+
+def test_engine_kernel_paths_bit_identical_pad_heavy():
+    """Small graphs rattling around big slot buckets: PAD slots dominate
+    and the kernels must mask them exactly like the reference path."""
+    pairs = _make_pairs(31, 5, nmin=3, nmax=6)
+    t = pack_pairs(pairs, slots=32)
+    out_k = ged_batch(t, EngineConfig(pool=128, expand=4, use_kernel=True))
+    out_r = ged_batch(t, EngineConfig(pool=128, expand=4, use_kernel=False))
+    for key in out_k:
+        assert np.array_equal(out_k[key], out_r[key]), key
+    want = np.array([exact_ged(q, g, bound="BMa").ged for q, g in pairs])
+    ok = out_k["exact"]
+    assert ok.mean() >= 0.8
+    assert np.array_equal(out_k["ged"][ok].astype(int), want[ok])
 
 
 def test_engine_identical_graphs_zero():

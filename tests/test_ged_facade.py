@@ -300,6 +300,70 @@ def test_sharded_backend_parity_on_8_devices():
     assert "OK" in out.stdout
 
 
+def test_sharded_single_device_fast_path():
+    """On a one-shard mesh the sharded executor must skip shard_map (the
+    fast path counter fires) and pad to batch_multiple == 1, with outcomes
+    identical to the jax backend."""
+    import jax
+    if jax.device_count() != 1:
+        pytest.skip("needs exactly one local device")
+    pairs = _small_pairs(21, 8)
+    eng = ged.GedEngine("sharded", **ENGINE_OPTS)
+    assert eng.batch_multiple == 1              # no shard-multiple padding
+    got = eng.compute(pairs)
+    ref = ged.GedEngine("jax", **ENGINE_OPTS).compute(pairs)
+    assert [(o.ged, o.certified) for o in got] == \
+        [(o.ged, o.certified) for o in ref]
+    assert eng.stats["executor_single_device_fastpath"] >= 1
+
+
+@pytest.fixture
+def _compile_cache_reset():
+    """The persistent compile cache is process-global jax config; point it
+    back off after the test so later tests don't write into a deleted
+    tmp_path.  The config update alone is not enough — jax latches its
+    cache state at first use, so without ``reset_cache()`` every later
+    compile in the process keeps writing into the removed directory."""
+    yield
+    import jax
+    from jax.experimental.compilation_cache import compilation_cache
+
+    from repro.ged import exec as gexec
+    jax.config.update("jax_compilation_cache_dir", None)
+    compilation_cache.reset_cache()
+    gexec._PERSISTENT_CACHE["dir"] = None
+
+
+def test_compile_cache_dir_knob(tmp_path, _compile_cache_reset):
+    """GedEngine(compile_cache_dir=...) enables jax's persistent cache:
+    executables are serialised into the directory and the stats surface
+    the process-wide hit/miss counters."""
+    d = str(tmp_path / "cc")
+    eng = ged.GedEngine("jax", compile_cache_dir=d, **ENGINE_OPTS)
+    assert eng.compile_cache_dir == d
+    eng.compute(_small_pairs(22, 2))
+    stats = eng.stats
+    for key in ("persistent_cache_hits", "persistent_cache_misses",
+                "persistent_cache_entries"):
+        assert key in stats, stats
+    # the engine's compile may have been answered by this process's jit
+    # cache (no XLA compile => nothing to persist); force a fresh entry
+    if stats["persistent_cache_entries"] == 0:
+        import jax
+        import jax.numpy as jnp
+        jax.jit(lambda x: x * 2 + 19)(jnp.ones(3)).block_until_ready()
+    assert len(os.listdir(d)) >= 1
+
+
+def test_compile_cache_env_default(tmp_path, monkeypatch,
+                                   _compile_cache_reset):
+    from repro.ged.exec import COMPILE_CACHE_ENV, enable_compile_cache
+    d = str(tmp_path / "env_cc")
+    monkeypatch.setenv(COMPILE_CACHE_ENV, d)
+    assert enable_compile_cache(None) == d
+    assert os.path.isdir(d)
+
+
 def test_shard_padding_round_trip():
     """Buckets padded to shard multiples still answer exactly the real
     pairs, in order, with the same results as unpadded planning."""

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 from repro.kernels.bma_cost_matrix import bma_cost_matrix_pallas
+from repro.kernels.lsa_children import lsa_children_pallas
 from repro.kernels.reduced_top2 import reduced_top2_pallas
 
 
@@ -82,3 +83,113 @@ def test_ops_wrappers_vmap_and_grad_safety():
     np.testing.assert_allclose(np.asarray(full[0]), np.asarray(single))
     vm = jax.vmap(ops.bma_cost_matrix)(qv, gv, iq, ig, qa, ga, img, pa)
     np.testing.assert_allclose(np.asarray(vm), np.asarray(full))
+
+
+# ----------------------------------------------------------- LSa children
+
+def _lsa_inputs(rng, b, n, le):
+    """Random flat operands for the fused LSa kernel (see ref.py docs)."""
+    f = lambda *s: jnp.asarray(rng.integers(0, 4, s), jnp.float32)
+    return dict(
+        base=jnp.asarray(rng.integers(0, 9, (b, n)) * 0.5, jnp.float32),
+        free_g=jnp.asarray(rng.integers(0, 2, (b, n)), jnp.float32),
+        rowhist_g=f(b, n, le),
+        a_ju=jnp.asarray(rng.integers(0, le + 1, (b, n, n)), jnp.int32),
+        qrow=jnp.asarray(rng.integers(0, le + 1, (b, n)), jnp.int32),
+        pos_anch=jnp.asarray(rng.integers(0, 2, (b, n)), jnp.float32),
+        cq=f(b, n, le), cg=f(b, n, le),
+        base_j=f(b, n), adjb_j=f(b, n),
+        hq_i=0.5 * f(b, le), hg_i=0.5 * f(b, le), cq_vi=f(b, le),
+    )
+
+
+@pytest.mark.parametrize("b", [1, 3])
+@pytest.mark.parametrize("n", [8, 16, 32, 64])
+@pytest.mark.parametrize("le", [1, 2, 5])
+def test_lsa_children_kernel_sweep(b, n, le):
+    rng = np.random.default_rng(b * 1000 + n * 10 + le)
+    args = _lsa_inputs(rng, b, n, le)
+    got = lsa_children_pallas(*args.values(), interpret=True)
+    want = ref.lsa_children_ref(*args.values())
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("tile_u", [8, 16, 32])
+def test_lsa_children_kernel_tilings(tile_u):
+    rng = np.random.default_rng(9)
+    args = _lsa_inputs(rng, 2, 32, 3)
+    got = lsa_children_pallas(*args.values(), tile_u=tile_u, interpret=True)
+    want = ref.lsa_children_ref(*args.values())
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lsa_ops_wrapper_unbatched_and_vmap():
+    rng = np.random.default_rng(5)
+    args = list(_lsa_inputs(rng, 3, 16, 2).values())
+    full = ops.lsa_children(*args)
+    single = ops.lsa_children(*(x[0] for x in args))
+    np.testing.assert_array_equal(np.asarray(full[0]), np.asarray(single))
+    vm = jax.vmap(ops.lsa_children)(*args)
+    np.testing.assert_array_equal(np.asarray(vm), np.asarray(full))
+
+
+def _engine_state(rng, slots, n_graph, level):
+    """A real (PairConsts, StateMasks, level, g_cost) engine state."""
+    from repro.core.engine import bounds as eb
+    from repro.core.engine.tensor_graphs import pack_pairs
+    from repro.data.graphs import perturb, random_graph
+
+    q = random_graph(rng, n_graph, density=0.4, n_vlabels=3, n_elabels=2)
+    g = perturb(rng, q, int(rng.integers(0, 4)), n_vlabels=3, n_elabels=2)
+    t = pack_pairs([(q, g)], slots=slots)
+    pc = eb.make_pair_consts(
+        jnp.asarray(t.qv[0]), jnp.asarray(t.gv[0]), jnp.asarray(t.qa[0]),
+        jnp.asarray(t.ga[0]), jnp.asarray(t.order[0]), jnp.asarray(t.n[0]),
+        t.n_vlabels, t.n_elabels)
+    n = int(t.n[0])
+    level = min(level, n - 1)
+    img = np.full(slots, -1, np.int32)
+    img[:level] = rng.permutation(n)[:level]
+    sm = eb.state_masks(pc, jnp.asarray(img), jnp.int32(level))
+    g_cost = jnp.float32(float(rng.integers(0, 7)) * 0.5)
+    return pc, sm, jnp.int32(level), g_cost
+
+
+@pytest.mark.parametrize("slots,n_graph,level",
+                         [(8, 5, 0), (8, 8, 3), (16, 6, 1), (16, 12, 7),
+                          (32, 9, 4)])
+def test_lsa_engine_state_kernel_parity(slots, n_graph, level):
+    """bounds.lsa_children kernel path == unfused path, bit for bit, on
+    real engine states — PAD slots, bottom labels and masks included."""
+    from repro.core.engine import bounds as eb
+    rng = np.random.default_rng(slots * 100 + n_graph * 10 + level)
+    pc, sm, lvl, g_cost = _engine_state(rng, slots, n_graph, level)
+    want = eb.lsa_children(pc, sm, lvl, g_cost, use_kernel=False)
+    got = eb.lsa_children(pc, sm, lvl, g_cost, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lsa_engine_state_kernel_parity_hypothesis():
+    """Hypothesis sweep over graph sizes / levels / seeds (PAD-heavy slots
+    included via the slots draw): the fused kernel must equal the unfused
+    bound exactly — small-half float arithmetic leaves no rounding room."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.core.engine import bounds as eb
+
+    @settings(max_examples=25, deadline=None)
+    @given(slots=st.sampled_from([8, 16, 32]),
+           n_graph=st.integers(3, 12),
+           level=st.integers(0, 10),
+           seed=st.integers(0, 2 ** 16))
+    def check(slots, n_graph, level, seed):
+        if n_graph > slots:
+            n_graph = slots
+        rng = np.random.default_rng(seed)
+        pc, sm, lvl, g_cost = _engine_state(rng, slots, n_graph, level)
+        want = eb.lsa_children(pc, sm, lvl, g_cost, use_kernel=False)
+        got = eb.lsa_children(pc, sm, lvl, g_cost, use_kernel=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    check()

@@ -1,36 +1,43 @@
-"""Property tests for SPMD-friendly op variants (parallel/ops.py)."""
+"""Property tests for SPMD-friendly op variants (parallel/ops.py).
+
+Hypothesis-driven sweeps skip individually when hypothesis is absent;
+the deterministic cases always run.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
-
-from repro.parallel.ops import top_k_sorted
+from repro.parallel.ops import merge_sorted_topk, sort_by_key, top_k_sorted
 
 
-@settings(max_examples=40, deadline=None)
-@given(
-    b=st.integers(1, 5),
-    n=st.integers(2, 33),
-    k=st.integers(1, 8),
-    seed=st.integers(0, 2 ** 16),
-)
-def test_matches_lax_top_k_values(b, n, k, seed):
-    k = min(k, n)
-    rng = np.random.default_rng(seed)
-    x = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
-    v_ref, _ = jax.lax.top_k(x, k)
-    v, idx = top_k_sorted(x, k)
-    np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref), atol=0)
-    # indices point at the returned values
-    picked = np.take_along_axis(np.asarray(x), np.asarray(idx), axis=-1)
-    np.testing.assert_allclose(picked, np.asarray(v), atol=0)
-    # indices are distinct per row
-    for row in np.asarray(idx):
-        assert len(set(row.tolist())) == k
+def test_matches_lax_top_k_values():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        b=st.integers(1, 5),
+        n=st.integers(2, 33),
+        k=st.integers(1, 8),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def check(b, n, k, seed):
+        k = min(k, n)
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
+        v_ref, _ = jax.lax.top_k(x, k)
+        v, idx = top_k_sorted(x, k)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref), atol=0)
+        # indices point at the returned values
+        picked = np.take_along_axis(np.asarray(x), np.asarray(idx), axis=-1)
+        np.testing.assert_allclose(picked, np.asarray(v), atol=0)
+        # indices are distinct per row
+        for row in np.asarray(idx):
+            assert len(set(row.tolist())) == k
+
+    check()
 
 
 def test_descending_and_stable_on_ties():
@@ -38,6 +45,113 @@ def test_descending_and_stable_on_ties():
     v, idx = top_k_sorted(x, 3)
     np.testing.assert_array_equal(np.asarray(v)[0], [3.0, 3.0, 2.0])
     assert list(np.asarray(idx)[0][:2]) == [1, 2]      # stable tie order
+
+
+def _merge_oracle(a_keys, b_keys_sorted, a_drop, b_drop_sorted, keep):
+    """Stable sort of the concatenation, A-before-B on ties."""
+    allk = np.concatenate([a_keys, b_keys_sorted])
+    order = np.argsort(allk, kind="stable")
+    kept, dropped = order[:keep], order[keep:]
+    alld = np.concatenate([a_drop, b_drop_sorted])
+    dmin = alld[dropped].min() if len(dropped) else np.inf
+    return allk[kept], kept, dmin
+
+
+def _check_merge_case(na, nb, keep, seed):
+    if na + nb < keep:
+        keep = na + nb
+    rng = np.random.default_rng(seed)
+    # small integer keys force plenty of ties (the interesting case)
+    a = np.sort(rng.integers(0, 6, na)).astype(np.float32)
+    b_raw = rng.integers(0, 6, nb).astype(np.float32)
+    pa = np.arange(na, dtype=np.int32)
+    pb = 1000 + np.arange(nb, dtype=np.int32)
+    da = a + 0.5
+    db_raw = b_raw + 0.5
+
+    b_order = np.argsort(b_raw, kind="stable")
+    want_k, want_pos, want_dmin = _merge_oracle(
+        a, b_raw[b_order], da, db_raw[b_order], keep)
+    want_p = np.concatenate([pa, pb[b_order]])[want_pos]
+
+    # payload pre-sorted alongside the keys
+    bs, pbs = sort_by_key(jnp.asarray(b_raw), jnp.asarray(pb))
+    ko, po, dm = merge_sorted_topk(
+        jnp.asarray(a), bs, jnp.asarray(pa), pbs, keep,
+        drop_a=jnp.asarray(da), drop_b=jnp.asarray(db_raw[b_order]))
+    np.testing.assert_array_equal(np.asarray(ko), want_k)
+    np.testing.assert_array_equal(np.asarray(po), want_p)
+    assert float(dm) == float(want_dmin)
+
+    # perm_b mode: keys sorted separately, payload/drop in pre-sort order
+    bs2, order = sort_by_key(jnp.asarray(b_raw),
+                             jnp.arange(nb, dtype=jnp.int32))
+    ko2, po2, dm2 = merge_sorted_topk(
+        jnp.asarray(a), bs2, jnp.asarray(pa), jnp.asarray(pb), keep,
+        drop_a=jnp.asarray(da), drop_b=jnp.asarray(db_raw), perm_b=order)
+    np.testing.assert_array_equal(np.asarray(ko2), want_k)
+    np.testing.assert_array_equal(np.asarray(po2), want_p)
+    assert float(dm2) == float(want_dmin)
+
+
+@pytest.mark.parametrize("na,nb,keep,seed",
+                         [(16, 8, 16, 0), (0, 5, 3, 1), (7, 1, 8, 2),
+                          (12, 12, 6, 3), (3, 20, 10, 4), (24, 24, 30, 5)])
+def test_merge_sorted_topk_matches_stable_sort(na, nb, keep, seed):
+    _check_merge_case(na, nb, keep, seed)
+
+
+def test_merge_sorted_topk_matches_stable_sort_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(na=st.integers(0, 24), nb=st.integers(1, 24),
+           keep=st.integers(1, 30), seed=st.integers(0, 2 ** 16))
+    def check(na, nb, keep, seed):
+        _check_merge_case(na, nb, keep, seed)
+
+    check()
+
+
+def test_merge_sorted_topk_prefers_run_a_on_ties():
+    """The sorted-pool invariant needs the stable-merge tie rule: existing
+    pool entries (run A) outrank equal-keyed fresh children (run B)."""
+    a = jnp.asarray([1.0, 2.0])
+    b = jnp.asarray([1.0, 2.0])
+    _, payload, _ = merge_sorted_topk(
+        a, b, jnp.asarray([10, 20]), jnp.asarray([30, 40]), 4)
+    assert list(np.asarray(payload)) == [10, 30, 20, 40]
+
+
+def test_merge_sorted_topk_dropped_min_tracks_floor():
+    a = jnp.asarray([0.0, 5.0])
+    b = jnp.asarray([1.0, 9.0])
+    lb_a = jnp.asarray([0.0, 5.0])
+    lb_b = jnp.asarray([1.0, 9.0])
+    _, _, dmin = merge_sorted_topk(a, b, a, b, 2, drop_a=lb_a, drop_b=lb_b)
+    assert float(dmin) == 5.0                   # min lb among {5.0, 9.0}
+    _, _, none_dropped = merge_sorted_topk(a, b, a, b, 4,
+                                           drop_a=lb_a, drop_b=lb_b)
+    assert np.isinf(float(none_dropped))
+
+
+def test_merge_sorted_topk_multidim_payload_and_vmap():
+    rng = np.random.default_rng(3)
+    batch, na, nb, keep, w = 4, 12, 6, 10, 5
+    a = jnp.asarray(np.sort(rng.random((batch, na)), axis=1), jnp.float32)
+    b = jnp.asarray(np.sort(rng.random((batch, nb)), axis=1), jnp.float32)
+    pa = jnp.asarray(rng.integers(0, 9, (batch, na, w)), jnp.int32)
+    pb = jnp.asarray(rng.integers(0, 9, (batch, nb, w)), jnp.int32)
+    ko, po, dm = jax.vmap(
+        lambda a, b, pa, pb: merge_sorted_topk(a, b, pa, pb, keep)
+    )(a, b, pa, pb)
+    for i in range(batch):
+        allk = np.concatenate([np.asarray(a[i]), np.asarray(b[i])])
+        allp = np.concatenate([np.asarray(pa[i]), np.asarray(pb[i])])
+        order = np.argsort(allk, kind="stable")
+        np.testing.assert_array_equal(np.asarray(ko[i]), allk[order[:keep]])
+        np.testing.assert_array_equal(np.asarray(po[i]), allp[order[:keep]])
 
 
 def test_router_gradient_pattern():

@@ -32,7 +32,11 @@ from typing import Any, Dict, List, Optional, Tuple
 
 DEFAULT_FILE = "results/bench/BENCH_engine.json"
 # Row fields used to label a row inside a section (first match wins).
-ROW_KEYS = ("backend", "mode", "strategy", "bound", "tau", "corpus")
+# "case" leads: the kernel_hotpath section pre-composes its identity
+# (kernel + shape) into one field so same-kernel rows at different N
+# stay distinct across PRs; "run" labels the compile_cache cold/warm rows.
+ROW_KEYS = ("case", "run", "backend", "mode", "strategy", "bound", "tau",
+            "corpus")
 
 
 def row_label(row: Dict[str, Any], index: int) -> str:
@@ -92,9 +96,16 @@ def diff_sections(old: Dict[str, List[Dict]], new: Dict[str, List[Dict]]
 
 def regressions(rows: List[Dict[str, Any]], threshold_pct: float
                 ) -> List[Dict[str, Any]]:
-    """Throughput metrics that dropped more than ``threshold_pct``."""
+    """Bigger-is-better metrics that dropped more than ``threshold_pct``.
+
+    ``*_per_s`` covers the engine throughput sections; ``*_speedup``
+    covers the ``kernel_hotpath`` fused-vs-unfused and merge-vs-argsort
+    ratios, so a kernel that silently loses its edge shows up the same
+    way a throughput drop does.
+    """
     return [r for r in rows
-            if r["metric"].endswith("_per_s")
+            if (r["metric"].endswith("_per_s")
+                or r["metric"].endswith("_speedup"))
             and r["delta_pct"] is not None
             and r["delta_pct"] < -threshold_pct]
 
