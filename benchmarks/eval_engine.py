@@ -367,15 +367,111 @@ def engine_similarity_search(quick=True) -> List[Dict]:
         "verify_wall_s": s["verify_wall_s"],
         "wall_s": dt,
     }
-    assert s["stage0_pruned"] > 0.5 * s["candidates"], \
-        "stage-0 scan must prune most of the corpus"
+    assert s["index_pruned"] + s["stage0_pruned"] > 0.5 * s["candidates"], \
+        "the cheap stages must prune most of the corpus"
     assert row["hits"] >= len(queries), "planted duplicates must be found"
     print_table("Corpus similarity search (filter-verify pipeline)", [row],
                 ["corpus", "queries", "tau", "candidates", "stage0_pruned",
                  "stage1_decided", "stage2_verified", "filter_ratio",
                  "hits", "queries_per_s", "scan_wall_s", "verify_wall_s"])
     record_section("BENCH_engine", "similarity_search", [row])
+    # the corpus-size sweep for the stage −1 candidate index rides along:
+    # it emits its own ``candidate_index`` section (and, in full mode,
+    # validates the >=100k-corpus selectivity acceptance bar)
+    engine_candidate_index(quick=quick)
     return [row]
+
+
+def engine_candidate_index(quick=True) -> List[Dict]:
+    """Corpus-size sweep for the stage −1 ``CandidateIndex``.
+
+    For each corpus size an AIDS-like database (with planted
+    near-duplicates of every query) is ingested twice — once with
+    ``index=None`` (the previous full-scan pipeline, which doubles as the
+    recall oracle) and once with the banded WL-sketch index — and the
+    same ranged queries run through both.  Each row records the ingest
+    wall, the stage funnel, ``examined_frac`` (the corpus fraction stage
+    −1 leaves for the linear stages — smaller is better, and
+    ``tools/bench_diff.py`` flags it when it rises), measured recall
+    against the oracle, and steady-state queries/s; rows land in the
+    ``candidate_index`` section of ``results/bench/BENCH_engine.json``.
+
+    In full mode the sweep reaches a >=100k-graph corpus and enforces
+    the acceptance bar: exact mode examines <=10% of the database per
+    query at *zero* recall loss.  A probabilistic row (``recall=0.9``)
+    shows the explicit exactness opt-out at the smallest size.
+    ``digest="exact"`` keeps ingest about hashing, not WL dedup probes;
+    ``cache=False`` keeps the repeat timings honest.
+    """
+    import jax
+
+    from repro.data.graphs import aids_like_graph, perturb
+    from repro.ged import GraphStore
+
+    sizes = [1_500] if quick else [20_000, 100_000]
+    tau, n_queries = 2.0, 3
+    opts = dict(batch_size=32, pool=512, expand=8, max_iters=512,
+                cache=False, digest="exact")
+    rows = []
+    for size in sizes:
+        rng = np.random.default_rng(13)
+        corpus = [aids_like_graph(rng, int(rng.integers(8, 15)))
+                  for _ in range(size)]
+        queries = [corpus[int(rng.integers(0, size))]
+                   for _ in range(n_queries)]
+        for query in queries:              # planted near-duplicates
+            for _ in range(2):
+                corpus.append(perturb(rng, query, int(rng.integers(1, 3)),
+                                      n_vlabels=62, n_elabels=3))
+        flat = GraphStore(corpus, index=None, **opts)
+        truth = [sorted(h.graph_id for h in flat.range_search(q, tau))
+                 for q in queries]
+        assert all(truth), "every query must have planted hits"
+
+        modes = [("exact", "auto")]
+        if size == sizes[0]:
+            modes.append(("recall90", {"recall": 0.9}))
+        for mode, index in modes:
+            store, ingest_s = timed(GraphStore, corpus, index=index, **opts)
+            per_q, _ = timed(store.search_batch, queries, tau)  # + compile
+            s = dict(store.stats)          # funnel of exactly one pass
+            got = [sorted(h.graph_id for h in qhits) for qhits in per_q]
+            want = sum(len(t) for t in truth)
+            found = sum(len(set(g) & set(t)) for g, t in zip(got, truth))
+            _, dt = timed_best(store.search_batch, queries, tau)
+            examined = (s["candidates"] - s["index_pruned"]) \
+                / max(s["candidates"], 1)
+            row = {
+                "case": f"{mode}/{len(corpus)}",
+                "mode": mode,
+                "devices": jax.device_count(),
+                "corpus": len(corpus),
+                "queries": n_queries,
+                "tau": tau,
+                "ingest_s": ingest_s,
+                "examined_frac": examined,
+                "index_pruned": s["index_pruned"],
+                "stage0_pruned": s["stage0_pruned"],
+                "stage1_decided": s["stage1_decided"],
+                "stage2_verified": s["stage2_verified"],
+                "hits": s["hits"],
+                "recall": found / want,
+                "queries_per_s": n_queries / dt,
+                "index_wall_s": s["index_wall_s"],
+            }
+            if mode == "exact":
+                assert got == truth, \
+                    f"exact index changed a result set at |DB|={len(corpus)}"
+                if len(corpus) >= 100_000:
+                    assert examined <= 0.10, \
+                        f"stage -1 examined {examined:.2%} of the corpus"
+            rows.append(row)
+    print_table("Candidate index corpus-size sweep (stage -1)", rows,
+                ["case", "corpus", "queries", "tau", "examined_frac",
+                 "index_pruned", "stage0_pruned", "stage1_decided",
+                 "stage2_verified", "recall", "queries_per_s", "ingest_s"])
+    record_section("BENCH_engine", "candidate_index", rows)
+    return rows
 
 
 ALL = (engine_agreement_and_throughput, engine_verification,

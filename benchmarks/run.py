@@ -21,14 +21,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
-                    help="comma list: eval1..eval9, engine, kernels, "
-                         "eval_kernels, roofline")
+                    help="comma list: eval1..eval9, engine, index, "
+                         "kernels, eval_kernels, roofline")
     args = ap.parse_args()
     quick = not args.full
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
+    # tags subsumed by a broader one in a default (no --only) run:
+    # "engine" already runs the candidate-index sweep via
+    # engine_similarity_search, so "index" only fires when asked for
+    # (the CI index-smoke step runs `--only index`).
+    implied = {"index"}
+
     def want(tag: str) -> bool:
-        return not only or tag in only
+        return tag in only if only else tag not in implied
 
     t0 = time.time()
     failures = []
@@ -52,6 +58,7 @@ def main() -> None:
                    eval_engine.engine_escalation_overlap,
                    eval_engine.engine_similarity_search,
                    eval_engine.scheduler_cost_model),
+        "index": (eval_engine.engine_candidate_index,),
         "kernels": (eval_engine.kernel_validation,),
         "eval_kernels": eval_kernels.ALL,
     }

@@ -2,11 +2,13 @@
 (§1, §5.3), end to end through ``repro.ged.GraphStore``.
 
 A molecule corpus is ingested once (shared label vocab, resident stage-0
-feature arrays, WL-digest dedup); queries then run the staged
-filter-verify pipeline: a vectorized corpus scan prunes with sound
-label/degree/size bounds, the anchor-aware engine bounds decide most
-survivors at a tiny budget, and only the remainder pays full certified
-verification (``docs/search.md``).
+feature arrays, WL-digest dedup, a banded WL-sketch candidate index);
+queries then run the staged filter-verify pipeline: the sound sketch
+index prunes most of the corpus without scanning it (``docs/index.md``),
+a vectorized corpus scan prunes the survivors with label/degree/size
+bounds, the anchor-aware engine bounds decide most of the rest at a tiny
+budget, and only the remainder pays full certified verification
+(``docs/search.md``).
 
     PYTHONPATH=src python examples/similarity_search.py
 """
@@ -47,7 +49,8 @@ print(f"wall time      : {dt:.2f}s "
 print(f"all certified  : {all(h.certified for h in hits)}")
 print(f"filter ratio   : {stats['filter_ratio']:.2%} of "
       f"{int(stats['candidates'])} candidates decided before verification "
-      f"(stage 0 pruned {int(stats['stage0_pruned'])})")
+      f"(index pruned {int(stats['index_pruned'])}, "
+      f"stage 0 pruned {int(stats['stage0_pruned'])})")
 
 # the same ingested corpus answers nearest-neighbour queries: visit
 # candidates in lower-bound order, stop once the bound passes the k-th best

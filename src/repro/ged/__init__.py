@@ -8,9 +8,11 @@ a single :class:`GedOutcome` result schema.
 
 Corpus-scale similarity search goes through the same door:
 :class:`GraphStore` ingests a graph database once (shared label vocab,
-resident stage-0 feature arrays, canonical-digest dedup) and answers
-``range_search`` / ``top_k`` / ``search_batch`` queries via a staged
-filter-verify pipeline, returning ranked :class:`SearchHit` results.
+resident stage-0 feature arrays, canonical-digest dedup, a sublinear
+:class:`CandidateIndex` — banded WL-sketch LSH plus distance-reuse pivot
+pruning) and answers ``range_search`` / ``top_k`` / ``search_batch``
+queries via a staged filter-verify pipeline, returning ranked
+:class:`SearchHit` results.
 
 Policies ride on the executor layer (:mod:`repro.ged.exec`): an
 :class:`Executor` owns device placement, compile caching, packing and
@@ -34,7 +36,9 @@ from repro.ged.api import GedEngine, compute, verify
 from repro.ged.backends import (available_backends, make_backend,
                                 register_backend)
 from repro.ged.exec import (Executor, PendingBatch, ResultCache,
-                            ShardedExecutor, graph_digest, wl_digest)
+                            ShardedExecutor, SketchSpec, batch_signatures,
+                            graph_digest, wl_digest, wl_signature)
+from repro.ged.index import CandidateIndex, sketch_damage
 from repro.ged.plan import as_graph, build_plan, slot_bucket
 from repro.ged.results import GedOutcome, SearchHit
 from repro.ged.store import GraphStore
@@ -43,7 +47,12 @@ __all__ = [
     "GedEngine",
     "GedOutcome",
     "GraphStore",
+    "CandidateIndex",
     "SearchHit",
+    "SketchSpec",
+    "sketch_damage",
+    "wl_signature",
+    "batch_signatures",
     "compute",
     "verify",
     "register_backend",

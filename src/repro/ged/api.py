@@ -33,8 +33,8 @@ from repro.core.engine.search import EngineConfig
 from repro.ged.backends import Backend, make_backend
 from repro.ged.exec import (DIGESTS, ResultCache, detached,
                             enable_compile_cache, pair_key,
-                            persistent_cache_stats)
-from repro.ged.plan import Vocab, as_pairs, build_plan
+                            pair_key_from_digests, persistent_cache_stats)
+from repro.ged.plan import Vocab, as_graph, as_pairs, build_plan
 from repro.ged.results import GedOutcome
 
 Taus = Union[float, Sequence[float]]
@@ -283,8 +283,54 @@ class GedEngine:
             out["result_cache_hits"] = self._cache.hits
             out["result_cache_misses"] = self._cache.misses
             out["result_cache_entries"] = len(self._cache)
+            out["index_pivot_hits"] = self._cache.pivot_hits
+            out["index_pivot_misses"] = self._cache.pivot_misses
         out.update(persistent_cache_stats())
         return out
+
+    def cached_distance(self, q=None, g=None, *,
+                        digests: Optional[Tuple[bytes, bytes]] = None
+                        ) -> Optional[float]:
+        """A certified exact distance for one pair straight from the result
+        cache — no planning, no execution, ``None`` on a miss.
+
+        This is the distance-reuse hook :class:`repro.ged.CandidateIndex`
+        prunes through: DB–DB distances that earlier traffic (top-k walks,
+        pivot probes, ingest seeding) left in the cache are read back by
+        digest and fed into the triangle bound
+        ``|d(q,p) - d(p,y)| <= d(q,y)``.  Pass ``digests=(dq, dg)`` when
+        the graphs are already hashed (the index pre-digests its corpus);
+        both orientations of the pair are probed.  Only *certified
+        computation* entries answer — verification entries carry no exact
+        distance, uncertified ones no guarantee — and only the scalar
+        comes back, never the cached outcome (so a WL-aliased entry's
+        dropped mapping stays dropped).  Lookups count into
+        ``stats["index_pivot_hits"]`` / ``["index_pivot_misses"]``, not
+        the query-path ``result_cache_*`` totals.
+
+        >>> from repro import ged
+        >>> eng = ged.GedEngine("exact")
+        >>> a, b = ([0], []), ([1], [])
+        >>> eng.cached_distance(a, b) is None       # nothing cached yet
+        True
+        >>> _ = eng.compute([(a, b)])
+        >>> eng.cached_distance(b, a)               # either orientation
+        1.0
+        """
+        if self._cache is None:
+            return None
+        if digests is None:
+            fn = DIGESTS[self.digest]
+            digests = (fn(as_graph(q)), fn(as_graph(g)))
+        for dq, dg in (digests, digests[::-1]):
+            key = pair_key_from_digests(dq, dg, False, None, self.config,
+                                        self.backend, digest=self.digest)
+            out = self._cache.peek(key)
+            if out is not None and out.certified and out.ged is not None:
+                self._cache.pivot_hits += 1
+                return float(out.ged)
+        self._cache.pivot_misses += 1
+        return None
 
     # --------------------------------------------------------- internal
 

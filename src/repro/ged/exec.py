@@ -477,6 +477,201 @@ def wl_digest(g: Graph, iters: int = 3) -> bytes:
 DIGESTS = {"exact": graph_digest, "wl": wl_digest}
 
 
+# ------------------------------------------------------- sketch signatures
+
+# Multiplicative uint32 hash constants (Knuth / murmur-style finalisers).
+# The *same* wraparound arithmetic runs in numpy on the host (one query
+# graph) and in jnp on device (the packed corpus), so signatures agree
+# bit-for-bit whichever path produced them — CandidateIndex probes depend
+# on that.
+_H_VMUL = 2654435761        # vertex-label hash multiplier
+_H_VADD = 0x9E3779B9
+_H_EMUL = 0xC2B2AE35        # edge label inside the neighbor combine
+_H_NMUL = 0x27D4EB2F        # per-neighbor contribution
+_H_CMUL = 0x85EBCA6B        # self color between WL rounds
+_H_CADD = 0x165667B1
+_H_BMUL = 0x9E3779B1        # edge-label histogram bin
+_H_BADD = 0x85EBCA77
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchSpec:
+    """Shape of a WL-sketch signature (see :func:`wl_signature`).
+
+    ``dims_v`` / ``dims_e`` are the hashed vertex- and edge-histogram
+    widths; ``wl_iters`` rounds of Weisfeiler-Leman color refinement run
+    before the vertex part is binned (0 = plain label histogram, the
+    default — deeper sketches discriminate more but carry a larger
+    admissible damage factor, see :func:`repro.ged.index.sketch_damage`).
+
+    >>> SketchSpec().dims        # 64 vertex + 16 edge bins + (n, m)
+    82
+    """
+
+    dims_v: int = 64
+    dims_e: int = 16
+    wl_iters: int = 0
+
+    @property
+    def dims(self) -> int:
+        return self.dims_v + self.dims_e + 2
+
+
+def wl_signature(g: Graph, spec: SketchSpec = SketchSpec()) -> np.ndarray:
+    """Integer sketch of one graph: hashed WL-color histogram (``dims_v``
+    bins) ⊕ hashed edge-label histogram (``dims_e`` bins) ⊕ ``(n, m)``.
+
+    The sketch is built so one unit edit operation moves its L1 norm by a
+    *bounded* amount (the damage factor — 2 at ``wl_iters=0``): a vertex
+    relabel moves one unit between two vertex bins, an edge edit touches
+    one edge bin plus the ``m`` entry, a vertex insert/delete one vertex
+    bin plus ``n``.  Hashing labels into bins only ever *merges* histogram
+    mass, which shrinks L1 — so ``ceil(L1 / damage)`` stays an admissible
+    GED lower bound at any width.  Host path of the pair whose batched
+    twin is :func:`batch_signatures`.
+
+    >>> from repro.ged.plan import as_graph
+    >>> s = wl_signature(as_graph(([0, 1], [(0, 1, 1)])))
+    >>> int(s.sum() - s[-2] - s[-1]), int(s[-2]), int(s[-1])   # 2 vertices, 1 edge
+    (3, 2, 1)
+    """
+    u32 = np.uint32
+    c = np.asarray(g.vlabels, dtype=np.int64).astype(u32) * u32(_H_VMUL) \
+        + u32(_H_VADD)
+    adj = np.ascontiguousarray(g.adj, dtype=np.int64).astype(u32)
+    present = g.adj > 0
+    for _ in range(spec.wl_iters):
+        h = (adj * u32(_H_EMUL) + c[None, :]) * u32(_H_NMUL)
+        nsum = np.where(present, h, u32(0)).sum(axis=1, dtype=u32)
+        c = c * u32(_H_CMUL) + nsum + u32(_H_CADD)
+    sig = np.zeros(spec.dims, dtype=np.int32)
+    sig[:spec.dims_v] = np.bincount(
+        (c % u32(spec.dims_v)).astype(np.int64), minlength=spec.dims_v)
+    iu, ju = np.nonzero(np.triu(g.adj, k=1))
+    elabs = np.asarray(g.adj, dtype=np.int64)[iu, ju].astype(u32)
+    ebin = ((elabs * u32(_H_BMUL) + u32(_H_BADD))
+            % u32(spec.dims_e)).astype(np.int64)
+    sig[spec.dims_v:spec.dims_v + spec.dims_e] = np.bincount(
+        ebin, minlength=spec.dims_e)
+    sig[-2] = g.n
+    sig[-1] = g.m
+    return sig
+
+
+def _signature_fn(spec: SketchSpec, slots: int):
+    """Pure-jnp single-graph signature over padded ``slots`` tensors,
+    bit-identical to :func:`wl_signature` (same uint32 wraparound ops in
+    the same order)."""
+    import jax.numpy as jnp
+    u32 = jnp.uint32
+
+    def one(vlab, mask, adj):
+        c = vlab.astype(u32) * u32(_H_VMUL) + u32(_H_VADD)
+        present = adj > 0
+        for _ in range(spec.wl_iters):
+            h = (adj.astype(u32) * u32(_H_EMUL) + c[None, :]) * u32(_H_NMUL)
+            nsum = jnp.sum(jnp.where(present, h, u32(0)), axis=1,
+                           dtype=jnp.uint32)
+            c = c * u32(_H_CMUL) + nsum + u32(_H_CADD)
+        vbin = (c % u32(spec.dims_v)).astype(jnp.int32)
+        vhist = jnp.zeros(spec.dims_v, jnp.int32).at[vbin].add(mask)
+        tri = jnp.triu(jnp.ones((slots, slots), jnp.int32), k=1)
+        w = present.astype(jnp.int32) * tri
+        ebin = ((adj.astype(u32) * u32(_H_BMUL) + u32(_H_BADD))
+                % u32(spec.dims_e)).astype(jnp.int32)
+        ehist = jnp.zeros(spec.dims_e, jnp.int32) \
+            .at[ebin.reshape(-1)].add(w.reshape(-1))
+        return jnp.concatenate(
+            [vhist, ehist, jnp.stack([jnp.sum(mask), jnp.sum(w)])])
+
+    return one
+
+
+def batch_signatures(graphs: Sequence[Graph],
+                     spec: SketchSpec = SketchSpec(),
+                     executor: Optional[Executor] = None,
+                     fns: Optional[Dict[tuple, object]] = None,
+                     chunk: int = 2048) -> np.ndarray:
+    """:func:`wl_signature` for a whole corpus, batched on device.
+
+    Graphs are grouped into power-of-two slot buckets (the planner's
+    shapes, so compilations are shared with everything else at that
+    width), packed into ``(batch, slots)`` label/mask and
+    ``(batch, slots, slots)`` adjacency tensors in chunks of ``chunk``
+    rows, and pushed through one vmapped jit per shape.  On a
+    :class:`ShardedExecutor` the chunk's batch axis is ``shard_map``-ed
+    over the executor's mesh axes — ingest-time signature builds ride
+    whatever placement the store runs on.  ``fns`` is the caller's
+    compiled-fn cache (keyed on shape), so repeated builds recompile
+    nothing.  Returns ``(len(graphs), spec.dims)`` int32, row order =
+    input order, bit-identical to the host path:
+
+    >>> from repro.ged.plan import as_graph
+    >>> g = as_graph(([0, 1, 0], [(0, 1, 1), (1, 2, 2)]))
+    >>> bool((batch_signatures([g])[0] == wl_signature(g)).all())
+    True
+    """
+    from repro.ged.plan import padded_batch, slot_bucket
+    sigs = np.zeros((len(graphs), spec.dims), dtype=np.int32)
+    if not len(graphs):
+        return sigs
+    import jax
+    import jax.numpy as jnp
+    executor = executor or Executor()
+    fns = {} if fns is None else fns
+    mult = executor.batch_multiple
+    by_slots: Dict[int, list] = {}
+    for i, g in enumerate(graphs):
+        by_slots.setdefault(slot_bucket(g.n), []).append(i)
+    for slots in sorted(by_slots):
+        idxs = by_slots[slots]
+        for lo in range(0, len(idxs), chunk):
+            part = idxs[lo:lo + chunk]
+            batch = padded_batch(len(part), mult)
+            vlab = np.zeros((batch, slots), dtype=np.int32)
+            mask = np.zeros((batch, slots), dtype=np.int32)
+            adj = np.zeros((batch, slots, slots), dtype=np.int32)
+            for r, gi in enumerate(part):
+                g = graphs[gi]
+                vlab[r, :g.n] = g.vlabels
+                mask[r, :g.n] = 1
+                adj[r, :g.n, :g.n] = g.adj
+            key = (spec, slots, batch)
+            fn = fns.get(key)
+            if fn is None:
+                one = _signature_fn(spec, slots)
+
+                def batched(v, mk, a, _one=one):
+                    return jax.vmap(_one)(v, mk, a)
+
+                if isinstance(executor, ShardedExecutor) and mult > 1:
+                    from jax.sharding import PartitionSpec as P
+
+                    from repro.parallel.ops import shard_map
+                    axes = executor.axes
+                    fn = jax.jit(shard_map(
+                        batched, mesh=executor.mesh,
+                        in_specs=(P(axes),) * 3, out_specs=P(axes),
+                        check=False))
+                else:
+                    fn = jax.jit(batched)
+                fns[key] = fn
+            out = np.asarray(fn(jnp.asarray(vlab), jnp.asarray(mask),
+                                jnp.asarray(adj)))
+            sigs[np.asarray(part, dtype=np.int64)] = out[:len(part)]
+    return sigs
+
+
+def pair_key_from_digests(dq: bytes, dg: bytes, verification: bool,
+                          tau: Optional[float], cfg: EngineConfig,
+                          backend: str, digest: str = "exact") -> tuple:
+    """:func:`pair_key` when the graph digests are already in hand — the
+    form :meth:`repro.ged.GedEngine.cached_distance` uses for pivot
+    lookups over pre-digested corpus members (no re-hashing per probe)."""
+    return (digest, dq, dg, bool(verification),
+            None if tau is None else float(tau), cfg, backend)
+
+
 def pair_key(q: Graph, g: Graph, verification: bool, tau: Optional[float],
              cfg: EngineConfig, backend: str, digest: str = "exact") -> tuple:
     """Cache key for one query: pair digests + mode (tau-aware) + config.
@@ -501,8 +696,8 @@ def pair_key(q: Graph, g: Graph, verification: bool, tau: Optional[float],
     True
     """
     fn = DIGESTS[digest]
-    return (digest, fn(q), fn(g), bool(verification),
-            None if tau is None else float(tau), cfg, backend)
+    return pair_key_from_digests(fn(q), fn(g), verification, tau, cfg,
+                                 backend, digest=digest)
 
 
 def detached(outcome: GedOutcome, stats: Dict[str, float]) -> GedOutcome:
@@ -548,9 +743,27 @@ class ResultCache:
             collections.OrderedDict()
         self.hits = 0
         self.misses = 0
+        # pivot-lookup traffic (CandidateIndex distance reuse) is counted
+        # separately from query hits/misses: a pivot miss is expected and
+        # must not skew the result-cache hit rate the serving layer reads.
+        self.pivot_hits = 0
+        self.pivot_misses = 0
 
     def __len__(self) -> int:
         return len(self._entries)
+
+    def peek(self, key: tuple) -> Optional[GedOutcome]:
+        """Read-only probe: no LRU bump, no hit/miss counting, and — unlike
+        :meth:`get` — no detached copy.  Callers must treat the entry as
+        frozen and may only read *scalars* off it (``ged``, ``certified``);
+        in particular a peeked entry's ``mapping`` must never be handed
+        out, because under WL digests the stored copy already dropped it
+        and resurrecting one from a different orientation's entry would
+        pair vertices of the wrong graph.  This is the lookup
+        :meth:`repro.ged.GedEngine.cached_distance` builds pivot pruning
+        on — thousands of probes per query, most missing, none of which
+        should churn the LRU order."""
+        return self._entries.get(key)
 
     def get(self, key: tuple) -> Optional[GedOutcome]:
         out = self._entries.get(key)

@@ -25,7 +25,7 @@ from repro.core.engine.corpus import (CorpusFeatures, graph_features,
                                       stage0_lower_bounds)
 from repro.core.exact.graph import Graph
 from repro.ged.exec import Executor, ShardedExecutor
-from repro.ged.plan import Vocab, slot_bucket
+from repro.ged.plan import Vocab, padded_batch, slot_bucket
 
 
 @dataclasses.dataclass
@@ -71,8 +71,13 @@ class FilterIndex:
             self.buckets.append(FeatureBucket(s, bids, feats, real))
         # id order the scan output follows (bucket construction order)
         self.ids: List[int] = [gid for b in self.buckets for gid in b.ids]
+        # id -> (bucket index, row within bucket), for subset gathers
+        self._where: Dict[int, Tuple[int, int]] = {
+            gid: (bi, ri) for bi, b in enumerate(self.buckets)
+            for ri, gid in enumerate(b.ids)}
         self._fns: Dict[tuple, object] = {}
-        self.stats: Dict[str, float] = {"scans": 0, "scanned": 0}
+        self.stats: Dict[str, float] = {"scans": 0, "scanned": 0,
+                                        "subset_scans": 0}
 
     def __len__(self) -> int:
         return len(self.ids)
@@ -92,7 +97,8 @@ class FilterIndex:
         for b in self.buckets:
             width = max(b.slots, slot_bucket(query.n))
             qf = graph_features([query], self.vocab, width=width)
-            parts.append(np.asarray(self._dispatch(qf, b, width))[: b.real])
+            parts.append(np.asarray(
+                self._dispatch(qf, b.features, b.slots, width))[: b.real])
             self.stats["scanned"] += b.real
         return np.concatenate(parts) if parts \
             else np.zeros(0, dtype=np.float32)
@@ -101,15 +107,55 @@ class FilterIndex:
         """:meth:`scan` keyed by corpus id instead of position."""
         return dict(zip(self.ids, self.scan(query).tolist()))
 
+    def scan_subset(self, query: Graph, ids: Sequence[int]
+                    ) -> Dict[int, float]:
+        """Stage-0 lower bounds for ``ids`` only — the scan a store runs
+        after a candidate index already pruned the rest of the corpus.
+
+        The requested rows are gathered out of the resident per-bucket
+        feature arrays, padded to a power-of-two batch (rounded to the
+        executor's shard multiple), and pushed through the same compiled
+        scan functions the full pass uses — compile keys depend only on
+        ``(slots, batch, widths)``, so subset scans at a given size reuse
+        compilations across queries.  ``stats["scanned"]`` counts the
+        *requested* rows, which is what makes the store's funnel ratios
+        honest about index savings.
+        """
+        self.stats["scans"] += 1
+        self.stats["subset_scans"] += 1
+        out: Dict[int, float] = {}
+        by_bucket: Dict[int, List[int]] = {}
+        for gid in ids:
+            by_bucket.setdefault(self._where[gid][0], []).append(gid)
+        mult = max(self.executor.batch_multiple, 1)
+        for bi in sorted(by_bucket):
+            b = self.buckets[bi]
+            gids = by_bucket[bi]
+            rows = np.asarray([self._where[g][1] for g in gids],
+                              dtype=np.int64)
+            batch = padded_batch(len(rows), mult)
+            take = np.concatenate(
+                [rows, np.repeat(rows[-1:], batch - len(rows))])
+            feats = CorpusFeatures(
+                *(np.ascontiguousarray(a[take])
+                  for a in (b.features.vhist, b.features.ehist,
+                            b.features.degs, b.features.n, b.features.m)))
+            width = max(b.slots, slot_bucket(query.n))
+            qf = graph_features([query], self.vocab, width=width)
+            vals = np.asarray(
+                self._dispatch(qf, feats, b.slots, width))[:len(rows)]
+            self.stats["scanned"] += len(rows)
+            out.update(zip(gids, vals.tolist()))
+        return out
+
     # --------------------------------------------------------- internal
 
-    def _dispatch(self, qf: CorpusFeatures, bucket: FeatureBucket,
-                  width: int):
+    def _dispatch(self, qf: CorpusFeatures, cf: CorpusFeatures,
+                  slots: int, width: int):
         import jax
         import jax.numpy as jnp
 
-        cf = bucket.features
-        key = (bucket.slots, cf.batch, width, cf.vhist.shape[1],
+        key = (slots, cf.batch, width, cf.vhist.shape[1],
                cf.ehist.shape[1])
         fn = self._fns.get(key)
         if fn is None:

@@ -66,6 +66,8 @@ class GedOutcome:
 
 
 # Pipeline stages a :class:`SearchHit` / store statistic can refer to.
+STAGE_INDEX = -1     # sublinear candidate index (banded WL-sketch LSH +
+                     # pivot triangle bounds); like stage 0, it only rejects
 STAGE_FILTER = 0     # vectorized corpus scan (label/degree/size bounds)
 STAGE_BOUND = 1      # batched anchor-aware engine bounds, tiny budget
 STAGE_VERIFY = 2     # full certified verification / computation

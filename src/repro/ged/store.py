@@ -14,10 +14,18 @@ corpus-level questions::
 
 Queries run a staged filter-verify pipeline:
 
+* **stage −1** — the sublinear candidate index
+  (:class:`repro.ged.CandidateIndex`, on by default): banded WL-sketch
+  LSH probes only hash-colliding bands instead of touching every corpus
+  row, and pivot triangle bounds reuse DB–DB distances already in the
+  engine's result cache.  Exact mode (default) is sound — band counts
+  are widened from an admissible sketch bound; ``index={"recall": r}``
+  is the explicit probabilistic opt-out; ``index=None`` disables stage
+  −1 entirely, reproducing the previous pipeline bit-for-bit.
 * **stage 0** — vectorized label-multiset / degree-sequence / size lower
-  bounds over the entire packed corpus in one fused device pass per slot
-  bucket (:class:`repro.ged.filters.FilterIndex`; sharded over the mesh
-  when the store has one).  Sound: never prunes a true hit.
+  bounds over the packed corpus (:class:`repro.ged.filters.FilterIndex`;
+  sharded over the mesh when the store has one) — restricted to stage
+  −1's survivors when the index is on.  Sound: never prunes a true hit.
 * **stage 1** — the existing anchor-aware batched engine bounds on the
   survivors, at a tiny search budget: one packed pass per slot bucket via
   :meth:`repro.ged.plan.Plan.subset_buckets` + the store's executor.
@@ -45,9 +53,10 @@ from repro.ged.api import GedEngine
 from repro.ged.exec import (DIGESTS, Executor, ShardedExecutor, detached,
                             engine_outcome, graph_digest, wl_digest)
 from repro.ged.filters import FilterIndex
+from repro.ged.index import CandidateIndex
 from repro.ged.plan import Plan, Vocab, as_graph, graphs_vocab, merge_vocab
-from repro.ged.results import (STAGE_BOUND, STAGE_FILTER, STAGE_VERIFY,
-                               GedOutcome, SearchHit)
+from repro.ged.results import (STAGE_BOUND, STAGE_FILTER, STAGE_INDEX,
+                               STAGE_VERIFY, GedOutcome, SearchHit)
 
 _INF = float("inf")
 
@@ -75,6 +84,14 @@ class GraphStore:
         the byte-identical fallback knob, skipping WL grouping entirely.
     filter_iters / filter_pool : stage-1 engine budget (``filter_iters=0``
         disables stage 1).
+    index : the stage −1 candidate index (:class:`repro.ged.
+        CandidateIndex`).  ``"auto"`` (default) builds one in sound exact
+        mode; a dict carries its knobs (``{"recall": 0.9}`` opts into the
+        probabilistic probe, ``{"pivot_seeds": 4}`` seeds distance-reuse
+        pivots at ingest, ``{"wl_iters": 1}`` deepens the sketch, ...); a
+        prebuilt :class:`~repro.ged.CandidateIndex` over this corpus is
+        used as-is; ``None`` disables stage −1 — every query then runs
+        the previous full-scan pipeline bit-for-bit.
     Remaining keyword arguments go to the :class:`GedEngine` constructor
     (``cache=``, ``pool=``, ``batch_size=`` ...).
 
@@ -85,15 +102,19 @@ class GraphStore:
     ...                        backend="exact", filter_iters=0)
     >>> [h.graph_id for h in store.range_search(([0, 1], [(0, 1, 1)]), 0.5)]
     [0]
-    >>> store.stats["candidates"], store.stats["stage0_pruned"]
+    >>> s = store.stats
+    >>> s["candidates"], s["index_pruned"] + s["stage0_pruned"]
     (2, 1)
+    >>> flat = ged.GraphStore([([0], [])], backend="exact", index=None)
+    >>> flat.stats["candidates_stage_-1"]      # stage -1 never runs
+    0
     """
 
     def __init__(self, graphs, *, vocab: Optional[Vocab] = None,
                  backend: str = "auto", mesh=None,
                  engine: Optional[GedEngine] = None,
                  digest: str = "wl", filter_iters: int = 2,
-                 filter_pool: int = 32, **engine_options):
+                 filter_pool: int = 32, index="auto", **engine_options):
         if digest not in DIGESTS:
             raise ValueError(f"unknown digest {digest!r}; "
                              f"expected one of {sorted(DIGESTS)}")
@@ -169,10 +190,33 @@ class GraphStore:
                 max_iters=int(filter_iters))
         self._index = FilterIndex(self.graphs, self._rep_ids, self.vocab,
                                   self.executor)
+        if index is None:
+            self._cindex: Optional[CandidateIndex] = None
+        elif isinstance(index, CandidateIndex):
+            self._cindex = index
+        else:
+            knobs = dict(index) if isinstance(index, dict) else {}
+            if not isinstance(index, dict) and index not in ("auto", True):
+                raise ValueError(
+                    f"index= expects None, 'auto', a knob dict, or a "
+                    f"CandidateIndex; got {index!r}")
+            self._cindex = CandidateIndex(
+                self.graphs, self._rep_ids, executor=self.executor, **knobs)
+        if self._cindex is not None:
+            # pivot lookups reuse the store's ingest-time exact digests
+            # when the engine caches on them — no per-probe re-hashing
+            digests = ({rid: d for d, rid in self._exact_of.items()
+                        if rid in self._members}
+                       if self.engine.digest == "exact" else None)
+            self._cindex.bind_engine(self.engine, digests)
+            self._cindex.seed_pivots(vocab=self.vocab)
         self._counts: Dict[str, float] = {
-            "queries": 0, "candidates": 0, "stage0_pruned": 0,
+            "queries": 0, "candidates": 0, "candidates_stage_-1": 0,
+            "index_pruned": 0, "index_sketch_pruned": 0,
+            "index_pivot_pruned": 0, "stage0_pruned": 0,
             "stage1_decided": 0, "stage1_accepted": 0, "stage2_verified": 0,
             "hits": 0, "topk_candidates": 0, "topk_verified": 0,
+            "topk_seeded": 0, "index_wall_s": 0.0,
             "scan_wall_s": 0.0, "bound_wall_s": 0.0, "verify_wall_s": 0.0,
         }
 
@@ -215,8 +259,14 @@ class GraphStore:
         Candidates are visited in increasing stage-0 lower-bound order
         and verified in chunks; the walk stops as soon as the next
         candidate's lower bound exceeds the current k-th best distance,
-        so most of the corpus is never verified.  Ties break by corpus
-        id, matching a brute-force ``(ged, id)`` sort.
+        so most of the corpus is never verified.  When the store has a
+        candidate index, the walk is *seeded* with the index's
+        sketch-nearest candidates: verifying likely-close graphs first
+        tightens the k-th-best cutoff early, so the lb-ordered remainder
+        exits sooner.  Seeding never changes the answer — the cutoff
+        check still runs against the full lb order — it only changes how
+        fast the walk converges.  Ties break by corpus id, matching a
+        brute-force ``(ged, id)`` sort.
         """
         k = int(k)
         if k <= 0 or not self.graphs:
@@ -228,13 +278,26 @@ class GraphStore:
         lb_of = self._index.scan_by_id(q)
         self._counts["scan_wall_s"] += time.perf_counter() - t0
         order = sorted(self._rep_ids, key=lambda rid: (lb_of[rid], rid))
-        vocab = merge_vocab(self.vocab, [q])
         chunk = max(k, 8)
+        seeds: List[int] = []
+        if self._cindex is not None and len(order) > chunk:
+            t0 = time.perf_counter()
+            seeds = self._cindex.nearest(q, limit=max(2 * k, chunk))
+            self._counts["topk_seeded"] += len(seeds)
+            seedset = set(seeds)
+            order = seeds + [rid for rid in order if rid not in seedset]
+            qid = self._exact_of.get(graph_digest(q))
+            if qid is not None:
+                self._cindex.note_pivot(self._rep_of[qid])
+            self._counts["index_wall_s"] += time.perf_counter() - t0
+        vocab = merge_vocab(self.vocab, [q])
         collected: List[Tuple[float, int, GedOutcome]] = []
         i = 0
         while i < len(order):
             kth = collected[k - 1][0] if len(collected) >= k else _INF
-            if lb_of[order[i]] > kth:
+            # the cutoff only applies once the walk is past the (unsorted)
+            # seed prefix and into the globally lb-ordered remainder
+            if i >= len(seeds) and lb_of[order[i]] > kth:
                 break
             reps = order[i:i + chunk]
             t0 = time.perf_counter()
@@ -315,12 +378,23 @@ class GraphStore:
         """Pipeline counters — the API contract for filter efficiency.
 
         ``candidates`` (deduped pairs entering the pipeline across all
-        range/verify queries), ``stage0_pruned``, ``stage1_decided`` /
-        ``stage1_accepted``, ``stage2_verified``, ``filter_ratio``
-        (fraction of candidates decided *before* full verification),
-        ``hits``, per-stage wall splits (``scan_wall_s`` /
-        ``bound_wall_s`` / ``verify_wall_s``), top-k counters, dedup
-        totals, and the engine's own counters under ``engine_*``.
+        range/verify queries), ``candidates_stage_-1`` (pairs stage −1
+        examined — equal to ``candidates`` when the index is on, 0 when
+        off), ``index_pruned`` (with its ``index_sketch_pruned`` /
+        ``index_pivot_pruned`` split), ``stage0_pruned``,
+        ``stage1_decided`` / ``stage1_accepted``, ``stage2_verified``,
+        ``filter_ratio`` (fraction of candidates decided *before* full
+        verification — index-pruned candidates count as filtered, so the
+        funnel ``index_pruned + stage0_pruned + stage1_decided +
+        stage2_verified`` always sums to ``candidates``), ``hits``,
+        per-stage wall splits (``index_wall_s`` / ``scan_wall_s`` /
+        ``bound_wall_s`` / ``verify_wall_s``), top-k counters
+        (``topk_seeded`` — index-suggested candidates verified first),
+        dedup totals, the candidate index's own counters under
+        ``index_*`` (probes, fallbacks, tables built, pivot traffic),
+        and the engine's counters under ``engine_*`` (including
+        ``engine_index_pivot_hits`` / ``_misses`` — result-cache traffic
+        from pivot lookups).
         """
         out = dict(self._counts)
         cand = out["candidates"]
@@ -329,6 +403,9 @@ class GraphStore:
         out["dedup_groups"] = len(self._rep_ids)
         out["dedup_duplicates"] = len(self.graphs) - len(self._rep_ids)
         out["dedup_checks"] = self._dedup_checks
+        if self._cindex is not None:
+            out.update({f"index_{k}": v
+                        for k, v in self._cindex.stats.items()})
         out.update({f"engine_{k}": v for k, v in self.engine.stats.items()})
         return out
 
@@ -339,18 +416,81 @@ class GraphStore:
         """Run the filter-verify pipeline for ``(rep_id, tau)`` jobs.
 
         Returns one ``(outcome, stage)`` per job, aligned.  Every stage
-        only *decides* soundly: stage 0 rejects when its lower bound
-        exceeds tau, stage 1 trusts the engine's certificate, stage 2
-        verifies whatever survived.
+        only *decides* soundly: stage −1 rejects by banded-sketch and
+        pivot triangle bounds (certified except for probabilistic-mode
+        band misses, which are the explicit ``recall`` trade), stage 0
+        rejects when its lower bound exceeds tau, stage 1 trusts the
+        engine's certificate, stage 2 verifies whatever survived.
         """
         self._counts["candidates"] += len(jobs)
         results: List[Optional[Tuple[GedOutcome, int]]] = [None] * len(jobs)
+        vocab = merge_vocab(self.vocab, [q])
+
+        alive: List[int] = list(range(len(jobs)))
+        if self._cindex is not None and jobs:
+            t0 = time.perf_counter()
+            self._counts["candidates_stage_-1"] += len(jobs)
+            tau_probe = max(tau for _, tau in jobs)
+            sketch = self._cindex.probe(q, tau_probe)
+            want = sorted({rid for rid, _ in jobs if rid in sketch})
+            piv = self._cindex.pivot_bounds(q, want, vocab=vocab) \
+                if want else {}
+            exact_mode = self._cindex.exact
+            # a banding miss in exact mode *proves* sketch L1 > budget,
+            # i.e. a distance floor strictly above the probed tau
+            damage = self._cindex.damage(q, tau_probe)
+            miss_lb = (np.floor(damage * tau_probe + 1e-9) + 1.0) / damage
+            alive = []
+            for pos, (rid, tau) in enumerate(jobs):
+                slb = sketch.get(rid)
+                if slb is None:
+                    self._counts["index_pruned"] += 1
+                    self._counts["index_sketch_pruned"] += 1
+                    results[pos] = (GedOutcome(
+                        ged=None, similar=False, certified=exact_mode,
+                        lower_bound=float(miss_lb) if exact_mode else 0.0,
+                        upper_bound=_INF, mapping=None,
+                        backend="store/index", wall_s=0.0, tau=tau,
+                        stats={"stage": STAGE_INDEX}), STAGE_INDEX)
+                    continue
+                lb = max(slb, piv.get(rid, 0.0))
+                if lb > tau:
+                    # admissible bound exceeded: certified in either mode
+                    self._counts["index_pruned"] += 1
+                    self._counts["index_sketch_pruned" if slb > tau
+                                 else "index_pivot_pruned"] += 1
+                    results[pos] = (GedOutcome(
+                        ged=None, similar=False, certified=True,
+                        lower_bound=lb, upper_bound=_INF, mapping=None,
+                        backend="store/index", wall_s=0.0, tau=tau,
+                        stats={"stage": STAGE_INDEX}), STAGE_INDEX)
+                else:
+                    alive.append(pos)
+            # a query that is itself a corpus member becomes a pivot:
+            # the distances this query computes are cache-resident and
+            # reusable by every later query's triangle bounds
+            qid = self._exact_of.get(graph_digest(q))
+            if qid is not None:
+                self._cindex.note_pivot(self._rep_of[qid])
+            self._counts["index_wall_s"] += time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        lb_of = self._index.scan_by_id(q)
+        if self._cindex is None:
+            lb_of = self._index.scan_by_id(q)
+        else:
+            # scan only stage -1 survivors; past half the corpus the
+            # resident full-bucket pass is the cheaper shape
+            want = sorted({jobs[pos][0] for pos in alive})
+            if not want:
+                lb_of = {}
+            elif 2 * len(want) <= len(self._rep_ids):
+                lb_of = self._index.scan_subset(q, want)
+            else:
+                lb_of = self._index.scan_by_id(q)
         self._counts["scan_wall_s"] += time.perf_counter() - t0
         survivors: List[int] = []
-        for pos, (rid, tau) in enumerate(jobs):
+        for pos in alive:
+            rid, tau = jobs[pos]
             lb = lb_of[rid]
             if lb > tau:
                 self._counts["stage0_pruned"] += 1
@@ -361,8 +501,6 @@ class GraphStore:
                     stats={"stage": STAGE_FILTER}), STAGE_FILTER)
             else:
                 survivors.append(pos)
-
-        vocab = merge_vocab(self.vocab, [q])
         if survivors and self._filter_cfg is not None:
             plan = Plan.lazy(
                 [(q, self.graphs[jobs[pos][0]]) for pos in survivors],

@@ -105,10 +105,11 @@ class GedVerificationService:
 
         The store shares this service's engine — and therefore its
         result cache, compile cache and executor (mesh placement
-        included) — so ``store_options`` may only carry store-level
-        knobs (``digest``, ``filter_iters``, ``filter_pool``,
-        ``vocab``); engine-level options raise.  Returns the store for
-        direct ``range_search`` / ``top_k`` use.
+        included; the candidate index's pivot distances live in that
+        shared result cache) — so ``store_options`` may only carry
+        store-level knobs (``digest``, ``filter_iters``, ``filter_pool``,
+        ``vocab``, ``index``); engine-level options raise.  Returns the
+        store for direct ``range_search`` / ``top_k`` use.
         """
         # GedEngine slots are pinned for the serving batch shape; the
         # store's stage-1 buckets pack through the same engine config.
@@ -159,18 +160,26 @@ class GedSimilarityService:
     """Corpus similarity search as a request/response service.
 
     A thin route over :class:`repro.ged.GraphStore`: ingest the database
-    at construction, then serve ranged and k-NN queries.  Example::
+    at construction, then serve ranged and k-NN queries.  ``index=``
+    configures the store's sublinear stage −1 candidate index
+    (:class:`repro.ged.CandidateIndex`): the default ``"auto"`` builds a
+    sound exact-mode index, a knob dict tunes it — ``index={"recall":
+    0.95}`` trades exactness for selectivity explicitly, ``index=
+    {"pivot_seeds": 4}`` pre-computes DB–DB pivot distances into the
+    engine's result cache at ingest — and ``index=None`` serves with the
+    plain full-scan pipeline.  Example::
 
-        svc = GedSimilarityService(db_graphs, mesh=mesh)
+        svc = GedSimilarityService(db_graphs, mesh=mesh,
+                                   index={"recall": 0.95})
         hits = svc.range_search(query, tau=4.0)
         answers = svc.search([SearchRequest(q1, tau=3.0),
                               SearchRequest(q2, k=10)])
     """
 
     def __init__(self, graphs, *, mesh=None, batch_size: int = 256,
-                 **store_options):
+                 index="auto", **store_options):
         self.store = GraphStore(graphs, mesh=mesh, batch_size=batch_size,
-                                **store_options)
+                                index=index, **store_options)
 
     @property
     def stats(self) -> Dict[str, float]:

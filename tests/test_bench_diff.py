@@ -58,6 +58,24 @@ def test_regressions_flag_only_big_throughput_drops():
     assert all(r["metric"].endswith("_per_s") for r in regs)
 
 
+def test_examined_frac_regresses_when_it_rises():
+    """Stage −1 selectivity is smaller-is-better: a rising examined_frac
+    is a regression, a falling one is an improvement."""
+    old = {"candidate_index": [
+        {"case": "exact/100000", "examined_frac": 0.01,
+         "queries_per_s": 5.0}]}
+    worse = {"candidate_index": [
+        {"case": "exact/100000", "examined_frac": 0.05,
+         "queries_per_s": 5.0}]}
+    better = {"candidate_index": [
+        {"case": "exact/100000", "examined_frac": 0.002,
+         "queries_per_s": 5.0}]}
+    regs = regressions(diff_sections(old, worse), threshold_pct=20.0)
+    assert [(r["row"], r["metric"]) for r in regs] == \
+        [("case=exact/100000", "examined_frac")]
+    assert regressions(diff_sections(old, better), threshold_pct=20.0) == []
+
+
 def test_row_label_falls_back_to_position():
     assert row_label({"backend": "jax"}, 0) == "backend=jax"
     assert row_label({"tau": 3.0}, 1) == "tau=3.0"

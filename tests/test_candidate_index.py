@@ -1,0 +1,305 @@
+"""``ged.CandidateIndex`` — the stage −1 candidate generator: signature
+host/device parity (including the 8-device sharded build), empirical
+admissibility of the sketch-damage constant, exact-mode probe soundness
+against the brute-force oracle (seeded sweeps plus a hypothesis
+property), probabilistic-mode measured recall, band-table reuse, pivot
+triangle bounds through the engine's shared result cache, the restricted
+stage-0 subset scan, and ``GraphStore(index=None)`` parity."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import ged
+from repro.core.exact.brute import brute_force_ged
+from repro.data.graphs import perturb, random_graph
+from repro.ged.exec import (Executor, SketchSpec, batch_signatures,
+                            graph_digest, wl_signature)
+from repro.ged.index import CandidateIndex, sketch_damage
+
+STORE_OPTS = dict(pool=256, expand=4, max_iters=256, batch_size=8)
+
+
+def _corpus(seed, count, nmin=3, nmax=7, planted=2):
+    rng = np.random.default_rng(seed)
+    graphs = [random_graph(rng, int(rng.integers(nmin, nmax + 1)),
+                           density=0.4, n_vlabels=3, n_elabels=2)
+              for _ in range(count)]
+    for _ in range(planted):
+        graphs.append(perturb(rng, graphs[0], int(rng.integers(1, 3)),
+                              n_vlabels=3, n_elabels=2))
+    return graphs
+
+
+# --------------------------------------------------- signature parity
+
+@pytest.mark.parametrize("spec", [
+    SketchSpec(),
+    SketchSpec(wl_iters=1),
+    SketchSpec(dims_v=32, dims_e=8, wl_iters=2),
+])
+def test_batch_signatures_match_host_signatures(spec):
+    """The JAX-batched corpus signature build is bit-identical to the
+    host path — exact-mode soundness leans on the two never diverging."""
+    rng = np.random.default_rng(11)
+    graphs = [random_graph(rng, int(rng.integers(2, 11)), density=0.5,
+                           n_vlabels=5, n_elabels=3) for _ in range(40)]
+    sigs = batch_signatures(graphs, spec, Executor())
+    assert sigs.shape == (40, spec.dims)
+    host = np.stack([wl_signature(g, spec) for g in graphs])
+    assert np.array_equal(sigs, host)
+    for g, s in zip(graphs, host):
+        assert s[-2] == g.n and s[-1] == np.count_nonzero(g.adj) // 2
+
+
+def test_sketch_damage_bounds_sketch_movement():
+    """Empirical admissibility: k unit edits never move the sketch by
+    more than k * damage in L1, at depth 0 and depth 1."""
+    rng = np.random.default_rng(12)
+    for spec in (SketchSpec(), SketchSpec(wl_iters=1)):
+        for _ in range(40):
+            g = random_graph(rng, int(rng.integers(3, 9)), density=0.5,
+                             n_vlabels=3, n_elabels=2)
+            k = int(rng.integers(1, 4))
+            h = perturb(rng, g, k, n_vlabels=3, n_elabels=2)
+            deg = max(int(g.degrees().max()), int(h.degrees().max()))
+            damage = sketch_damage(spec, deg)
+            l1 = int(np.abs(wl_signature(g, spec).astype(np.int64)
+                            - wl_signature(h, spec).astype(np.int64)).sum())
+            assert l1 <= damage * k, (spec, k, l1, damage)
+
+
+# ----------------------------------------------------- probe soundness
+
+def test_exact_probe_is_sound_against_bruteforce():
+    """exact=True stage −1 never drops a graph within tau, and the lower
+    bounds it reports never exceed the true GED."""
+    corpus = _corpus(13, 20, planted=4)
+    idx = CandidateIndex(corpus, list(range(len(corpus))))
+    assert idx.exact
+    rng = np.random.default_rng(14)
+    queries = [corpus[0], corpus[-1],
+               random_graph(rng, 5, density=0.5, n_vlabels=3, n_elabels=2)]
+    for q in queries:
+        truth = [brute_force_ged(q, g) for g in corpus]
+        for tau in (0.0, 1.0, 2.0, 3.0):
+            got = idx.probe(q, tau)
+            for i, t in enumerate(truth):
+                if t <= tau:
+                    assert i in got, (tau, i, t, sorted(got))
+            for i, lb in got.items():
+                assert lb <= truth[i] + 1e-6, (tau, i, lb, truth[i])
+
+
+def test_exact_probe_soundness_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), tau=st.integers(0, 4))
+    def run(seed, tau):
+        rng = np.random.default_rng(seed)
+        corpus = [random_graph(rng, int(rng.integers(2, 6)), density=0.5,
+                               n_vlabels=2, n_elabels=2) for _ in range(8)]
+        query = random_graph(rng, int(rng.integers(2, 6)), density=0.5,
+                             n_vlabels=2, n_elabels=2)
+        idx = CandidateIndex(corpus, list(range(len(corpus))),
+                             reps=1 + seed % 3)
+        got = idx.probe(query, float(tau))
+        for i, g in enumerate(corpus):
+            if brute_force_ged(query, g) <= tau:
+                assert i in got, (seed, tau, i)
+
+    run()
+
+
+def test_probabilistic_probe_meets_recall_target():
+    """recall=r keeps ceil(r * (budget+1)) pigeonhole bands, so measured
+    recall over a seeded workload must come out >= the configured r."""
+    corpus = _corpus(15, 24, planted=6)
+    idx = CandidateIndex(corpus, list(range(len(corpus))), recall=0.7)
+    assert not idx.exact
+    tau, hits, found = 2.0, 0, 0
+    for qi in (0, 1, len(corpus) - 1, len(corpus) - 2):
+        q = corpus[qi]
+        got = idx.probe(q, tau)
+        for i, g in enumerate(corpus):
+            if brute_force_ged(q, g) <= tau:
+                hits += 1
+                found += int(i in got)
+    assert hits > 0
+    assert found / hits >= 0.7, (found, hits)
+    with pytest.raises(ValueError):
+        CandidateIndex(corpus, [0], recall=0.0)
+    with pytest.raises(ValueError):
+        CandidateIndex(corpus, [0], recall=1.5)
+
+
+def test_band_tables_built_lazily_and_reused():
+    corpus = _corpus(16, 16)
+    idx = CandidateIndex(corpus, list(range(len(corpus))), reps=2)
+    assert idx.stats["tables_built"] == 0        # ingest builds nothing
+    q = corpus[0]
+    idx.probe(q, 1.0)
+    built = idx.stats["tables_built"]
+    assert built == 2                            # one table per rep
+    idx.probe(corpus[1], 1.0)
+    idx.probe(q, 1.0)
+    assert idx.stats["tables_built"] == built    # same band count: reused
+    idx.probe(q, 2.0)                            # wider budget: new tables
+    assert idx.stats["tables_built"] == built + 2
+
+
+def test_probe_falls_back_to_linear_scan_when_bands_exceed_dims():
+    """When budget+1 > sketch dims banding cannot certify anything — the
+    probe must degrade to the (sound) full-sketch scan, not mis-prune."""
+    corpus = _corpus(17, 10)
+    idx = CandidateIndex(corpus, list(range(len(corpus))),
+                         dims_v=4, dims_e=2)
+    q = corpus[0]
+    tau = float(idx.spec.dims)                   # budget = 2*tau >> dims
+    got = idx.probe(q, tau)
+    assert idx.stats["probe_fallbacks"] == 1
+    truth = [brute_force_ged(q, g) for g in corpus]
+    for i, t in enumerate(truth):
+        if t <= tau:
+            assert i in got
+
+
+# ----------------------------------------- pivots + shared result cache
+
+def test_pivot_bounds_are_admissible_and_use_shared_cache():
+    corpus = _corpus(18, 12, planted=3)
+    eng = ged.GedEngine("jax", **{k: v for k, v in STORE_OPTS.items()
+                                  if k != "batch_size"})
+    idx = CandidateIndex(corpus, list(range(len(corpus))),
+                         pivot_seeds=2, pivot_coverage=6,
+                         pivot_min_candidates=1)
+    idx.bind_engine(eng)
+    assert idx.seed_pivots() > 0                 # DB–DB pairs -> eng cache
+    assert idx.use_pivots
+    rng = np.random.default_rng(19)
+    q = random_graph(rng, 5, density=0.5, n_vlabels=3, n_elabels=2)
+    ids = list(range(len(corpus)))
+    bounds = idx.pivot_bounds(q, ids)
+    assert eng.stats["index_pivot_hits"] >= 1    # cached d(p, y) reads
+    for y, lb in bounds.items():
+        assert lb > 0.0
+        assert lb <= brute_force_ged(q, corpus[y]) + 1e-6, (y, lb)
+
+
+def test_cached_distance_probes_both_orientations_and_counts():
+    rng = np.random.default_rng(20)
+    a = random_graph(rng, 5, density=0.5, n_vlabels=3, n_elabels=2)
+    b = perturb(rng, a, 1, n_vlabels=3, n_elabels=2)
+    c = random_graph(rng, 4, density=0.5, n_vlabels=3, n_elabels=2)
+    eng = ged.GedEngine("exact")
+    assert eng.cached_distance(a, b) is None     # cold cache
+    assert eng.stats["index_pivot_misses"] == 1
+    d = eng.compute([(a, b)])[0].ged
+    hits0 = eng.stats["result_cache_hits"]
+    assert eng.cached_distance(b, a) == d        # reversed orientation
+    assert eng.stats["index_pivot_hits"] == 1
+    assert eng.stats["result_cache_hits"] == hits0   # peek: no LRU churn
+    # a verification-only entry (tau-keyed) must never answer a
+    # distance probe — its ged field may be a bound, not the distance
+    eng.verify([(a, c)], [0.0])
+    assert eng.cached_distance(a, c) is None
+    # digests= path reads the same entries without re-hashing
+    assert eng.cached_distance(
+        digests=(graph_digest(ged.as_graph(a)),
+                 graph_digest(ged.as_graph(b)))) == d
+
+
+def test_store_index_none_reproduces_indexed_answers_bit_for_bit():
+    corpus = _corpus(21, 14, planted=3)
+    indexed = ged.GraphStore(corpus, **STORE_OPTS)
+    flat = ged.GraphStore(corpus, index=None, **STORE_OPTS)
+    assert flat._cindex is None and indexed._cindex is not None
+    rng = np.random.default_rng(22)
+    queries = [corpus[0],
+               random_graph(rng, 5, density=0.5, n_vlabels=3, n_elabels=2)]
+    for q in queries:
+        for tau in (0.0, 2.0, 4.0):
+            assert [(h.graph_id, h.ged, h.similar, h.certified)
+                    for h in indexed.range_search(q, tau)] == \
+                   [(h.graph_id, h.ged, h.similar, h.certified)
+                    for h in flat.range_search(q, tau)], tau
+        for k in (1, 3, 7):
+            assert [(h.graph_id, h.ged) for h in indexed.top_k(q, k)] == \
+                   [(h.graph_id, h.ged) for h in flat.top_k(q, k)], k
+    s = indexed.stats
+    assert s["index_pruned"] > 0                 # the index did real work
+    assert s["index_sketch_pruned"] + s["index_pivot_pruned"] == \
+        s["index_pruned"]
+
+
+def test_store_accepts_index_knobs_and_instance():
+    corpus = _corpus(23, 8)
+    knobbed = ged.GraphStore(corpus, index={"recall": 0.9, "reps": 1},
+                             **STORE_OPTS)
+    assert knobbed._cindex is not None and not knobbed._cindex.exact
+    hits = knobbed.range_search(corpus[0], 0.0)
+    assert any(h.graph_id == 0 for h in hits)
+    with pytest.raises(ValueError):
+        ged.GraphStore(corpus, index="bogus", **STORE_OPTS)
+
+
+def test_scan_subset_matches_full_scan():
+    from repro.ged.filters import FilterIndex
+    from repro.ged.plan import graphs_vocab
+    rng = np.random.default_rng(24)
+    graphs = [random_graph(rng, int(rng.integers(2, 9)), density=0.4,
+                           n_vlabels=3, n_elabels=2) for _ in range(17)]
+    idx = FilterIndex(graphs, list(range(len(graphs))),
+                      graphs_vocab(graphs), Executor())
+    q = random_graph(rng, 5, density=0.4, n_vlabels=3, n_elabels=2)
+    full = idx.scan_by_id(q)
+    for subset in ([0], [3, 11, 16], list(range(0, 17, 2))):
+        scanned0 = idx.stats["scanned"]
+        got = idx.scan_subset(q, subset)
+        assert idx.stats["scanned"] - scanned0 == len(subset)
+        assert set(got) == set(subset)
+        for gid in subset:
+            assert got[gid] == pytest.approx(full[gid]), gid
+    assert idx.stats["subset_scans"] == 3
+
+
+# ------------------------------------------- sharded signature build
+
+SHARDED_SIGS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, %r)
+    import jax, numpy as np
+    from repro.data.graphs import random_graph
+    from repro.ged.exec import (ShardedExecutor, SketchSpec,
+                                batch_signatures, wl_signature)
+
+    assert jax.device_count() == 8
+    rng = np.random.default_rng(25)
+    graphs = [random_graph(rng, int(rng.integers(2, 11)), density=0.5,
+                           n_vlabels=5, n_elabels=3) for _ in range(37)]
+    ex = ShardedExecutor(jax.make_mesh((8,), ("data",)))
+    for spec in (SketchSpec(), SketchSpec(wl_iters=1)):
+        sigs = batch_signatures(graphs, spec, ex, chunk=16)
+        host = np.stack([wl_signature(g, spec) for g in graphs])
+        assert np.array_equal(sigs, host), spec
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_signature_build_parity_on_8_devices():
+    """batch_signatures under a real 8-device ShardedExecutor stays
+    bit-identical to the host signature path (exact-mode soundness)."""
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", SHARDED_SIGS_SCRIPT % src],
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

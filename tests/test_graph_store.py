@@ -166,13 +166,25 @@ def test_store_stats_account_for_every_candidate():
     s = store.stats
     assert s["queries"] == 2
     assert s["candidates"] == 2 * s["dedup_groups"]
-    decided = s["stage0_pruned"] + s["stage1_decided"] + s["stage2_verified"]
+    # the funnel sums to |candidates| across every stage, -1 included
+    decided = s["index_pruned"] + s["stage0_pruned"] + \
+        s["stage1_decided"] + s["stage2_verified"]
     assert decided == s["candidates"]
+    assert s["candidates_stage_-1"] == s["candidates"]  # index on: sees all
     assert 0.0 <= s["filter_ratio"] <= 1.0
     assert s["filter_ratio"] == \
         (s["candidates"] - s["stage2_verified"]) / s["candidates"]
-    assert s["stage0_pruned"] > 0          # random corpus: the scan bites
-    assert s["scan_wall_s"] >= 0.0 and "engine_pairs" in s
+    # random corpus: the cheap stages bite before full verification
+    assert s["index_pruned"] + s["stage0_pruned"] > 0
+    assert s["scan_wall_s"] >= 0.0 and s["index_wall_s"] >= 0.0
+    assert "engine_pairs" in s
+
+    flat = ged.GraphStore(corpus, index=None, **STORE_OPTS)
+    flat.range_search(corpus[0], 2.0)
+    f = flat.stats
+    assert f["candidates_stage_-1"] == 0 and f["index_pruned"] == 0
+    assert f["stage0_pruned"] + f["stage1_decided"] + \
+        f["stage2_verified"] == f["candidates"]
 
 
 def test_search_batch_tags_query_ids():
@@ -342,7 +354,8 @@ SHARDED_STORE_SCRIPT = textwrap.dedent("""
         assert a == b, (tau, a, b)
     assert [h.graph_id for h in store.top_k(q, 4)] == \\
         [h.graph_id for h in plain.top_k(q, 4)]
-    assert store.stats["stage0_pruned"] > 0
+    s = store.stats
+    assert s["index_pruned"] + s["stage0_pruned"] > 0
     print("OK")
 """)
 

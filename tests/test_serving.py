@@ -88,8 +88,8 @@ def test_verify_routes_registered_corpus_through_store(request_set):
     assert results[17].certified and results[17].similar
     s = svc.stats
     assert s["store_candidates"] == 17
-    assert s["store_stage0_pruned"] + s["store_stage1_decided"] + \
-        s["store_stage2_verified"] == 17
+    assert s["store_index_pruned"] + s["store_stage0_pruned"] + \
+        s["store_stage1_decided"] + s["store_stage2_verified"] == 17
     # a shared engine is exclusive with engine-level store options
     with pytest.raises(TypeError):
         svc.register_corpus(corpus, cache=False)

@@ -18,7 +18,10 @@ The baseline is ``git show <ref>:<file>``; ``--base`` defaults to the
 last commit that touched the file *before* the current one, i.e. the
 previous benchmark run that was checked in.  Throughput metrics
 (``*_per_s``) count as regressed when they drop more than ``--threshold``
-(default 20%); everything else is informational.
+(default 20%); selectivity metrics (``examined_frac`` — the fraction of
+the corpus the candidate index leaves for the linear stages) are
+smaller-is-better and count as regressed when they *rise* by more than
+the threshold; everything else is informational.
 """
 
 from __future__ import annotations
@@ -96,18 +99,27 @@ def diff_sections(old: Dict[str, List[Dict]], new: Dict[str, List[Dict]]
 
 def regressions(rows: List[Dict[str, Any]], threshold_pct: float
                 ) -> List[Dict[str, Any]]:
-    """Bigger-is-better metrics that dropped more than ``threshold_pct``.
+    """Metrics that moved the wrong way by more than ``threshold_pct``.
 
-    ``*_per_s`` covers the engine throughput sections; ``*_speedup``
-    covers the ``kernel_hotpath`` fused-vs-unfused and merge-vs-argsort
-    ratios, so a kernel that silently loses its edge shows up the same
-    way a throughput drop does.
+    Bigger-is-better: ``*_per_s`` covers the engine throughput sections;
+    ``*_speedup`` covers the ``kernel_hotpath`` fused-vs-unfused and
+    merge-vs-argsort ratios, so a kernel that silently loses its edge
+    shows up the same way a throughput drop does.  Smaller-is-better:
+    ``examined_frac`` (the ``candidate_index`` section's stage −1
+    selectivity — corpus fraction surviving into the linear stages), so
+    an index that silently stops pruning also surfaces here.
     """
-    return [r for r in rows
-            if (r["metric"].endswith("_per_s")
-                or r["metric"].endswith("_speedup"))
-            and r["delta_pct"] is not None
-            and r["delta_pct"] < -threshold_pct]
+    def bad(r: Dict[str, Any]) -> bool:
+        if r["delta_pct"] is None:
+            return False
+        m = r["metric"]
+        if m.endswith("_per_s") or m.endswith("_speedup"):
+            return r["delta_pct"] < -threshold_pct
+        if m.endswith("examined_frac"):
+            return r["delta_pct"] > threshold_pct
+        return False
+
+    return [r for r in rows if bad(r)]
 
 
 def load_baseline(path: str, base: Optional[str]) -> Tuple[Optional[Dict],
