@@ -1,10 +1,17 @@
-"""Roofline table from the dry-run JSONs (results/dryrun/*.json).
+"""Roofline table from the dry-run JSONs (results/dryrun/*.json), plus
+the GED kernel-attribution table from BENCH_engine.json.
 
 Per (arch x shape x mesh): the three terms in seconds, the dominant
 bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness ratio, peak bytes/device,
 and the MFU upper bound implied by the dominant term.
 
-Usage:  python -m benchmarks.roofline [--mesh single] [--md]
+``--ged`` renders the ``roofline`` section ``benchmarks/eval_kernels.py
+kernel_roofline`` records instead: per bound kernel (and the rank merge
+and whole search step), the unfused einsum chain's compiled-HLO
+bytes/FLOPs next to the fused kernel's analytic minimum traffic — the
+*why* behind each ``kernel_hotpath`` dispatch decision.
+
+Usage:  python -m benchmarks.roofline [--mesh single] [--md] [--ged]
 """
 
 from __future__ import annotations
@@ -15,9 +22,15 @@ from pathlib import Path
 from typing import Dict, List
 
 DRYRUN = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+BENCH = Path(__file__).resolve().parent.parent / "results" / "bench" / \
+    "BENCH_engine.json"
 
 COLS = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
         "bottleneck", "useful_ratio", "peak_GiB", "mfu_ub")
+
+GED_COLS = ("case", "flops", "bytes_unfused", "bytes_fused_min",
+            "traffic_ratio", "intensity_unfused", "intensity_fused_ideal",
+            "memory_bound", "device_kind")
 
 
 def load(mesh: str = "all") -> List[Dict]:
@@ -51,6 +64,33 @@ def load(mesh: str = "all") -> List[Dict]:
     return rows
 
 
+def load_ged() -> List[Dict]:
+    """Rows of the ``roofline`` section of BENCH_engine.json ([] when the
+    kernel rail hasn't been run)."""
+    try:
+        data = json.loads(BENCH.read_text())
+    except (OSError, ValueError):
+        return []
+    rows = data.get("roofline", []) if isinstance(data, dict) else []
+    return [r for r in rows if isinstance(r, dict)]
+
+
+def markdown_ged(rows: List[Dict]) -> str:
+    out = ["| case | flops | bytes unfused | bytes fused min | traffic x | "
+           "intensity | fused ideal | verdict |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        verdict = "memory" if r.get("memory_bound") else "compute"
+        out.append(
+            f"| {r.get('case')} | {_fmt(r.get('flops'), 3)} | "
+            f"{_fmt(r.get('bytes_unfused'), 3)} | "
+            f"{_fmt(r.get('bytes_fused_min'), 3)} | "
+            f"{_fmt(r.get('traffic_ratio'), 3)} | "
+            f"{_fmt(r.get('intensity_unfused'), 3)} | "
+            f"{_fmt(r.get('intensity_fused_ideal'), 3)} | {verdict} |")
+    return "\n".join(out)
+
+
 def _fmt(v, nd=4):
     if v is None:
         return "-"
@@ -82,7 +122,23 @@ def main() -> None:
     ap.add_argument("--mesh", default="single",
                     choices=("single", "multi", "all"))
     ap.add_argument("--md", action="store_true")
+    ap.add_argument("--ged", action="store_true",
+                    help="render the GED kernel attribution from "
+                         "BENCH_engine.json instead of the dry-run table")
     args = ap.parse_args()
+    if args.ged:
+        rows = load_ged()
+        if not rows:
+            print("no GED roofline section — run "
+                  "`python -m benchmarks.run --only eval_kernels` first")
+            return
+        if args.md:
+            print(markdown_ged(rows))
+            return
+        print(",".join(GED_COLS))
+        for r in rows:
+            print(",".join(_fmt(r.get(c)) for c in GED_COLS))
+        return
     rows = load(args.mesh)
     if not rows:
         print("no dry-run results found — run "

@@ -3,6 +3,7 @@ the paper-faithful reference), the batched-engine suite, kernel validation,
 and the roofline summary from the dry-run artifacts.
 
   PYTHONPATH=src python -m benchmarks.run            # quick (default)
+  PYTHONPATH=src python -m benchmarks.run --quick    # same, explicit (CI)
   PYTHONPATH=src python -m benchmarks.run --full     # larger sizes
   PYTHONPATH=src python -m benchmarks.run --only eval5,engine
 """
@@ -14,16 +15,22 @@ import time
 import traceback
 
 from benchmarks import eval_engine, eval_kernels, eval_paper
-from benchmarks.roofline import load as roofline_load, markdown
+from benchmarks.roofline import load as roofline_load, load_ged, \
+    markdown, markdown_ged
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="explicit quick mode (the default; CI smoke "
+                         "steps pass it so intent reads in the workflow)")
     ap.add_argument("--only", default="",
                     help="comma list: eval1..eval9, engine, index, "
                          "kernels, eval_kernels, roofline")
     args = ap.parse_args()
+    if args.full and args.quick:
+        ap.error("--full and --quick are mutually exclusive")
     quick = not args.full
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
@@ -59,7 +66,11 @@ def main() -> None:
                    eval_engine.engine_similarity_search,
                    eval_engine.scheduler_cost_model),
         "index": (eval_engine.engine_candidate_index,),
-        "kernels": (eval_engine.kernel_validation,),
+        # "kernels" is the CI smoke tag: oracle validation plus the
+        # autotune sweep -> persist -> reload -> dispatch probe (parity
+        # asserted inside, timings informational)
+        "kernels": (eval_engine.kernel_validation,
+                    eval_kernels.kernel_autotune),
         "eval_kernels": eval_kernels.ALL,
     }
     for tag, fns in engine_map.items():
@@ -77,6 +88,10 @@ def main() -> None:
         if rows:
             print("\n== Roofline (single-pod, from dry-run artifacts) ==")
             print(markdown(rows))
+        ged_rows = load_ged()
+        if ged_rows:
+            print("\n== GED kernel roofline (from BENCH_engine.json) ==")
+            print(markdown_ged(ged_rows))
 
     print(f"\nbenchmarks done in {time.time() - t0:.0f}s; "
           f"{len(failures)} failures")

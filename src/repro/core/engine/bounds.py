@@ -93,8 +93,8 @@ def child_exact_delta(pc: PairConsts, sm: StateMasks) -> jnp.ndarray:
 
 
 def lsa_children(pc: PairConsts, sm: StateMasks, level: jnp.ndarray,
-                 g_cost: jnp.ndarray, use_kernel: bool = False
-                 ) -> jnp.ndarray:
+                 g_cost: jnp.ndarray, use_kernel: bool = False,
+                 tile_u: int = 0) -> jnp.ndarray:
     """delta^LSa(f u {v_i -> u}) for every u; +BIG where u is not free.
 
     ``use_kernel=True`` routes the (N, N)-shaped work — inner-edge
@@ -140,7 +140,7 @@ def lsa_children(pc: PairConsts, sm: StateMasks, level: jnp.ndarray,
         base = g_cost + dv + ups_v
         return kops.lsa_children(base, sm.free_g, rowhist_g, a_ju, qrow,
                                  sm.pos_anch, cq, cg, base_j, adjb_j,
-                                 hq_i, hg_i, cq_vi)
+                                 hq_i, hg_i, cq_vi, tile_u=tile_u)
 
     # ---- inner edges --------------------------------------------------------
     hq_i = 0.5 * jnp.einsum("lvw,v,w->l", pc.oh_q, sm.free_q2, sm.free_q2)
@@ -183,8 +183,8 @@ def lsa_children(pc: PairConsts, sm: StateMasks, level: jnp.ndarray,
     return jnp.where(sm.free_g > 0, lb, BIG)
 
 
-def bma_cost_matrix(pc: PairConsts, sm: StateMasks, use_kernel: bool = True
-                    ) -> jnp.ndarray:
+def bma_cost_matrix(pc: PairConsts, sm: StateMasks, use_kernel: bool = True,
+                    tile_v: int = 0, tile_u: int = 0) -> jnp.ndarray:
     """lambda^BMa over all (v, u) with dummy structure for non-free slots.
 
     Dummy rows (anchored / PAD q-slots) pair with dummy columns at cost 0 and
@@ -196,6 +196,7 @@ def bma_cost_matrix(pc: PairConsts, sm: StateMasks, use_kernel: bool = True
         lam_free = kops.bma_cost_matrix(
             pc.qv, pc.gv, inner_q, inner_g,
             pc.qa_ord, pc.ga, sm.img_cl, sm.pos_anch,
+            tile_v=tile_v, tile_u=tile_u,
         )
     else:
         sq = jnp.sum(inner_q, axis=1)
@@ -240,10 +241,12 @@ def editorial_cost_tensor(pc: PairConsts, fmap: jnp.ndarray) -> jnp.ndarray:
 
 def bma_children(pc: PairConsts, sm: StateMasks, img: jnp.ndarray,
                  level: jnp.ndarray, g_cost: jnp.ndarray, sweeps: int,
-                 use_kernel: bool = True) -> BmaChildren:
+                 use_kernel: bool = True, tile_v: int = 0,
+                 tile_u: int = 0) -> BmaChildren:
     """Alg. 3 on TPU: one auction, dual forced bounds for every child."""
     N = pc.qv.shape[0]
-    lam = bma_cost_matrix(pc, sm, use_kernel=use_kernel)
+    lam = bma_cost_matrix(pc, sm, use_kernel=use_kernel,
+                          tile_v=tile_v, tile_u=tile_u)
     st = auc.run_auction(lam, sweeps)
     forced = auc.forced_dual_bounds(lam, st.prices, sm.vi)
     lb = g_cost + jnp.maximum(forced, 0.0)

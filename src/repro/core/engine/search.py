@@ -39,13 +39,14 @@ min lb > tau) — paper §5.3.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.engine import bounds as eb
 from repro.core.engine.tensor_graphs import GraphPairTensors
+from repro.kernels.autotune import KernelDispatch, concrete_dispatch
 from repro.parallel.ops import merge_sorted_topk, sort_by_key
 
 INF = 3.0e8
@@ -60,7 +61,20 @@ class EngineConfig:
     sweeps: int = 8           # auction sweeps per expansion
     bound: str = "hybrid"     # "lsa" | "bma" | "hybrid" (max of both)
     strategy: str = "astar"   # "astar" | "dfs"
-    use_kernel: bool = True   # Pallas kernels on the hot path
+    # True/False force the Pallas kernels on/off globally; "auto" resolves
+    # per bucket shape through the measured tuning table (see
+    # kernels/autotune.py).  ``dispatch`` is the resolved per-bucket plan
+    # the executor pins before jit — the config (dispatch included) is a
+    # static jit arg, so every compile cache keys on the decision while
+    # outcomes stay bit-identical across all dispatch paths.
+    use_kernel: Union[bool, str] = True
+    dispatch: Optional[KernelDispatch] = None
+
+    def __post_init__(self):
+        if self.use_kernel not in (True, False, "auto"):
+            raise ValueError(
+                f"use_kernel must be True, False or 'auto', "
+                f"got {self.use_kernel!r}")
 
 
 class PoolState(NamedTuple):
@@ -96,13 +110,16 @@ def _expand_one(pc: eb.PairConsts, cfg: EngineConfig, img, level, gcost,
     delta = eb.child_exact_delta(pc, sm)
     child_gcost = gcost + delta
 
+    d = concrete_dispatch(cfg, img.shape[-1])
     lb_parts = []
     if cfg.bound in ("lsa", "hybrid"):
         lb_parts.append(eb.lsa_children(pc, sm, level, gcost,
-                                        use_kernel=cfg.use_kernel))
+                                        use_kernel=d.lsa_fused,
+                                        tile_u=d.lsa_tile_u))
     if cfg.bound in ("bma", "hybrid"):
         bma = eb.bma_children(pc, sm, img, level, gcost, cfg.sweeps,
-                              use_kernel=cfg.use_kernel)
+                              use_kernel=d.bma_fused,
+                              tile_v=d.bma_tile_v, tile_u=d.bma_tile_u)
         lb_parts.append(bma.lb)
         heur_img, heur_cost = bma.full_img, bma.full_cost
     else:
@@ -226,7 +243,8 @@ def run_pair(pair: Tuple, cfg: EngineConfig, tau: jnp.ndarray,
             rem_keys, ch_keys, rem, ch, P,
             drop_a=jnp.where(rem.valid & (rem.lb < new_ub), rem.lb, INF),
             drop_b=jnp.where(ch.valid, ch.lb, INF),
-            perm_b=ch_order)
+            perm_b=ch_order,
+            use_kernel=concrete_dispatch(cfg, N).merge_fused)
         new_pool = kept._replace(lb=jnp.where(kept.valid, kept.lb, INF))
         new_floor = jnp.minimum(c.floor, dropped_lb)
 

@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.engine.search import EngineConfig
+from repro.kernels.autotune import autotune_stats, enable_autotune
 from repro.ged.backends import Backend, make_backend
 from repro.ged.exec import (DIGESTS, ResultCache, detached,
                             enable_compile_cache, pair_key,
@@ -80,6 +81,16 @@ class GedEngine:
         than once per process.  Process-global (jax has one cache);
         hit/miss/entry counters appear in :attr:`stats` as
         ``persistent_cache_*``.
+    autotune_dir : directory for the measured kernel-tuning table
+        (default: the ``REPRO_GED_AUTOTUNE_DIR`` environment variable;
+        unset means in-memory only).  ``use_kernel="auto"`` resolves each
+        bucket's ``(slots, batch)`` shape to fused/unfused kernels plus
+        tuned tile sizes through the table — pre-warm it with
+        :func:`repro.kernels.autotune.tune`.  Process-global like the
+        compile cache; counters appear in :attr:`stats` as
+        ``autotune_*`` alongside ``pallas_interpret`` (True when Pallas
+        kernels would run in interpret mode, i.e. timings here are not
+        accelerator numbers).
     digest : graph-hash family for the result-cache keys.  ``"exact"``
         (default) keys on byte-identical graphs, so cached mappings stay
         index-compatible; ``"wl"`` keys on Weisfeiler-Leman canonical
@@ -97,7 +108,11 @@ class GedEngine:
     ``sweeps``, ``bound``, ``strategy``, ``use_kernel``) override
     :class:`EngineConfig` defaults.  ``use_kernel`` is implied by the
     ``"jax"``/``"sharded"`` (False) and ``"pallas"`` (True) backend names —
-    passing a contradicting value there raises.
+    passing a contradicting boolean there raises, while
+    ``use_kernel="auto"`` is accepted on *every* backend: it defers the
+    fused/unfused choice to the measured per-bucket dispatch
+    (:mod:`repro.kernels.autotune`), which never changes outcomes, only
+    which bit-identical implementation runs.
 
     Examples
     --------
@@ -121,6 +136,7 @@ class GedEngine:
                  cache: bool = True,
                  cache_size: int = 4096,
                  compile_cache_dir: Optional[str] = None,
+                 autotune_dir: Optional[str] = None,
                  digest: str = "exact",
                  config: Optional[EngineConfig] = None,
                  **config_overrides):
@@ -132,6 +148,7 @@ class GedEngine:
                              f"expected one of {sorted(DIGESTS)}")
         self.digest = digest
         self.compile_cache_dir = enable_compile_cache(compile_cache_dir)
+        self.autotune_dir = enable_autotune(autotune_dir)
         if config is None:
             config = EngineConfig(**{"use_kernel": False, **config_overrides})
         elif config_overrides:
@@ -144,17 +161,23 @@ class GedEngine:
             max_in_flight=max_in_flight)
         self.backend = self._backend.name
         # "jax" means pure-jnp and "pallas" means kernels; default the flag
-        # from the backend name and refuse a contradicting user setting.
+        # from the backend name and refuse a contradicting boolean.
+        # "auto" is welcome everywhere: measured dispatch picks among
+        # bit-identical implementations, so it cannot contradict what a
+        # backend name promises about outcomes.
         self._kernel_default = getattr(self._backend, "kernel_default", None)
         if self._kernel_default is not None:
             asked = config_overrides.get("use_kernel")
-            if asked is not None and asked != self._kernel_default:
+            if asked == "auto":
+                pass
+            elif asked is not None and asked != self._kernel_default:
                 raise ValueError(
                     f"backend {backend!r} implies use_kernel="
                     f"{self._kernel_default}; use the "
                     f"{'pallas' if asked else 'jax'!r} backend instead")
-            config = dataclasses.replace(config,
-                                         use_kernel=self._kernel_default)
+            else:
+                config = dataclasses.replace(config,
+                                             use_kernel=self._kernel_default)
         self.config = config
         self._pending: List[Tuple[object, object, Optional[float]]] = []
 
@@ -262,7 +285,11 @@ class GedEngine:
         ``overlap_saved_s`` — device seconds hidden behind host-solver
         and drain work by overlapped rung execution.  Every engine adds
         ``executor_*``, ``compile_cache_*`` and ``result_cache_*``
-        counters where applicable.
+        counters where applicable, plus the kernel-dispatch telemetry:
+        ``autotune_hits`` / ``autotune_misses`` / ``autotune_sweep_s`` /
+        ``autotune_entries`` and ``pallas_interpret`` (True when Pallas
+        kernels fall back to interpret mode — CPU — so bench rows cannot
+        masquerade as accelerator numbers).
 
         >>> from repro import ged
         >>> eng = ged.GedEngine("exact")
@@ -286,6 +313,7 @@ class GedEngine:
             out["index_pivot_hits"] = self._cache.pivot_hits
             out["index_pivot_misses"] = self._cache.pivot_misses
         out.update(persistent_cache_stats())
+        out.update(autotune_stats())
         return out
 
     def cached_distance(self, q=None, g=None, *,
@@ -341,7 +369,8 @@ class GedEngine:
         if unknown:
             raise TypeError(f"unknown engine options: {sorted(unknown)}")
         asked = overrides.get("use_kernel")
-        if (asked is not None and self._kernel_default is not None
+        if (asked is not None and asked != "auto"
+                and self._kernel_default is not None
                 and asked != self._kernel_default):
             raise ValueError(
                 f"backend {self.backend!r} implies use_kernel="

@@ -43,6 +43,7 @@ import numpy as np
 from repro.core.engine import api as engine_api
 from repro.core.engine.search import EngineConfig
 from repro.core.exact.graph import Graph
+from repro.kernels import autotune
 from repro.ged.plan import Bucket, CompileCache, Vocab, pack_bucket
 from repro.ged.results import GedOutcome, engine_mapping
 
@@ -228,6 +229,14 @@ class Executor:
             out = pending.result()          # numpy dict, blocks if needed
         """
         self._check_batch(packed)
+        # ``use_kernel="auto"`` resolves to a concrete per-bucket kernel
+        # plan *here*, before anything jit-keyed sees the config: the
+        # resolved dispatch (tuning-table lookup or static heuristic for
+        # unmeasured shapes) is pinned on the config, so the jit cache,
+        # the CompileCache ledger and the sharded executor's fn cache all
+        # key on the actual decision.  Outcomes are bit-identical across
+        # dispatch choices, so result caching upstream stays sound.
+        cfg = autotune.resolve_config(cfg, packed.slots, packed.batch)
         self.cache.record(packed, cfg, verification)
         self.stats["calls"] += 1
         self.stats["pairs"] += packed.batch if real is None else int(real)

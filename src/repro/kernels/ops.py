@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.bma_cost_matrix import bma_cost_matrix_pallas
 from repro.kernels.lsa_children import lsa_children_pallas
+from repro.kernels.merge_topk import merge_ranks_pallas
 from repro.kernels.reduced_top2 import reduced_top2_pallas
 
 
@@ -31,7 +32,19 @@ def _disabled() -> bool:
     return os.environ.get("REPRO_DISABLE_PALLAS", "0") == "1"
 
 
-def bma_cost_matrix(qv, gv, inner_q, inner_g, qa_ord, ga, img_cl, pos_anch):
+def pallas_interpret() -> bool:
+    """True when Pallas kernels would run in ``interpret=True`` mode here.
+
+    Surfaced in ``GedEngine.stats`` (``pallas_interpret``) and consulted by
+    the ``kernels/autotune.py`` static heuristic so interpret-mode timings
+    can't masquerade as accelerator numbers and ``use_kernel="auto"``
+    defaults to the unfused path on CPU until a shape is measured.
+    """
+    return _interpret()
+
+
+def bma_cost_matrix(qv, gv, inner_q, inner_g, qa_ord, ga, img_cl, pos_anch,
+                    tile_v=0, tile_u=0):
     """lambda^BMa free-pair cost matrix; operands may be batched or not.
 
     ``ga`` is gathered at ``img_cl`` here (cheap XLA gather) so the kernel
@@ -51,12 +64,13 @@ def bma_cost_matrix(qv, gv, inner_q, inner_g, qa_ord, ga, img_cl, pos_anch):
     if _disabled():
         out = ref.bma_cost_matrix_ref(*args)
     else:
-        out = bma_cost_matrix_pallas(*args, interpret=_interpret())
+        out = bma_cost_matrix_pallas(*args, tile_v=tile_v, tile_u=tile_u,
+                                     interpret=_interpret())
     return out[0] if unbatched else out
 
 
 def lsa_children(base, free_g, rowhist_g, a_ju, qrow, pos_anch, cq, cg,
-                 base_j, adjb_j, hq_i, hg_i, cq_vi):
+                 base_j, adjb_j, hq_i, hg_i, cq_vi, tile_u=0):
     """Fused delta^LSa child-bound vector; operands may be batched or not.
 
     Operands are the pre-reduced histograms ``bounds.lsa_children``
@@ -71,8 +85,31 @@ def lsa_children(base, free_g, rowhist_g, a_ju, qrow, pos_anch, cq, cg,
     if _disabled():
         out = ref.lsa_children_ref(*args)
     else:
-        out = lsa_children_pallas(*args, interpret=_interpret())
+        out = lsa_children_pallas(*args, tile_u=tile_u,
+                                  interpret=_interpret())
     return out[0] if unbatched else out
+
+
+def merge_ranks(keys_a, keys_b, tile=0):
+    """Rank counts for merging two key-sorted runs; batched or not.
+
+    Returns ``(count_a, count_b)`` int32 with
+    ``count_a[i] = #{j: keys_b[j] < keys_a[i]}`` and
+    ``count_b[j] = #{i: keys_a[i] <= keys_b[j]}`` — exactly the
+    searchsorted left/right ranks ``parallel/ops.merge_sorted_topk``
+    computes, so routing through the kernel is bit-identical.
+    """
+    unbatched = keys_a.ndim == 1
+    if unbatched:
+        keys_a, keys_b = keys_a[None], keys_b[None]
+    if _disabled():
+        ca, cb = ref.merge_ranks_ref(keys_a, keys_b)
+    else:
+        ca, cb = merge_ranks_pallas(keys_a, keys_b, tile_x=tile,
+                                    interpret=_interpret())
+    if unbatched:
+        return ca[0], cb[0]
+    return ca, cb
 
 
 def reduced_top2(cost, prices):

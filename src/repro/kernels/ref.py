@@ -57,6 +57,24 @@ def hist_intersect_ref(hq: jnp.ndarray, hg: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(jnp.minimum(hq[:, :, None, :], hg[:, None, :, :]), axis=3)
 
 
+def merge_ranks_ref(keys_a: jnp.ndarray, keys_b: jnp.ndarray):
+    """Rank counts for a two-run merge: the semantics of record for
+    ``kernels/merge_topk.py``.
+
+    count_a[b, i] = #{j : keys_b[b, j] <  keys_a[b, i]}   (int32, (B, NA))
+    count_b[b, j] = #{i : keys_a[b, i] <= keys_b[b, j]}   (int32, (B, NB))
+
+    On sorted runs these equal ``searchsorted(keys_b, keys_a, "left")`` /
+    ``searchsorted(keys_a, keys_b, "right")``, which is how
+    ``parallel/ops.merge_sorted_topk`` consumes them.
+    """
+    count_a = jnp.sum(
+        (keys_b[:, None, :] < keys_a[:, :, None]).astype(jnp.int32), axis=2)
+    count_b = jnp.sum(
+        (keys_a[:, None, :] <= keys_b[:, :, None]).astype(jnp.int32), axis=2)
+    return count_a, count_b
+
+
 def lsa_children_ref(
     base: jnp.ndarray,       # (B, N) f32 — g_cost + vertex-label terms per u
     free_g: jnp.ndarray,     # (B, N) f32 — 1.0 where u is a free g vertex

@@ -89,6 +89,7 @@ def merge_sorted_topk(
     drop_a: Optional[jnp.ndarray] = None,
     drop_b: Optional[jnp.ndarray] = None,
     perm_b: Optional[jnp.ndarray] = None,
+    use_kernel: bool = False,
 ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
     """Merge two key-sorted runs, keep the smallest ``keep``, no argsort.
 
@@ -124,22 +125,35 @@ def merge_sorted_topk(
     1-D keys only — the engine ``vmap``s this over pairs.  ``keep`` must
     not exceed ``len(A) + len(B)`` (short runs would leave zero-filled
     output rows).
+
+    ``use_kernel=True`` computes the two rank-count passes with the
+    Pallas comparison-matrix kernel (``kernels/merge_topk.py``) instead
+    of binary searches — same integer ranks (the kernel counts exactly
+    the searchsorted left/right semantics), so the output is
+    bit-identical; everything downstream (scatters, payload gather,
+    floor) is shared.
     """
     import jax
     na, nb = keys_a.shape[0], keys_b.shape[0]
 
-    def rank_in(run, values, side):
-        # unrolled binary search for short runs: log2(n) fused gather
-        # steps beat the rolled scan's loop-carry overhead inside the
-        # engine's while_loop; the rolled form wins on big runs
-        method = "scan_unrolled" if run.shape[0] <= 256 else "scan"
-        return jnp.searchsorted(run, values, side=side,
-                                method=method).astype(jnp.int32)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        count_a, count_b = kops.merge_ranks(keys_a, keys_b)
+        rank_a = jnp.arange(na, dtype=jnp.int32) + count_a
+        rank_b = jnp.arange(nb, dtype=jnp.int32) + count_b
+    else:
+        def rank_in(run, values, side):
+            # unrolled binary search for short runs: log2(n) fused gather
+            # steps beat the rolled scan's loop-carry overhead inside the
+            # engine's while_loop; the rolled form wins on big runs
+            method = "scan_unrolled" if run.shape[0] <= 256 else "scan"
+            return jnp.searchsorted(run, values, side=side,
+                                    method=method).astype(jnp.int32)
 
-    rank_a = jnp.arange(na, dtype=jnp.int32) + rank_in(keys_b, keys_a,
-                                                       "left")
-    rank_b = jnp.arange(nb, dtype=jnp.int32) + rank_in(keys_a, keys_b,
-                                                       "right")
+        rank_a = jnp.arange(na, dtype=jnp.int32) + rank_in(keys_b, keys_a,
+                                                           "left")
+        rank_b = jnp.arange(nb, dtype=jnp.int32) + rank_in(keys_a, keys_b,
+                                                           "right")
 
     # keys land via (cheap) scalar scatters; payload rows via one gather
     keys_out = jnp.zeros((keep,), keys_a.dtype)

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from repro.kernels import ops, ref
 from repro.kernels.bma_cost_matrix import bma_cost_matrix_pallas
 from repro.kernels.lsa_children import lsa_children_pallas
+from repro.kernels.merge_topk import merge_ranks_pallas
 from repro.kernels.reduced_top2 import reduced_top2_pallas
 
 
@@ -193,3 +194,72 @@ def test_lsa_engine_state_kernel_parity_hypothesis():
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
     check()
+
+
+# -------------------------------------------------- merge-path rank counts
+
+def _sorted_runs(rng, b, na, nb, lo=0, hi=6):
+    """Key-sorted runs with plenty of ties (small integer keys)."""
+    a = np.sort(rng.integers(lo, hi, (b, na)), axis=1).astype(np.float32)
+    bb = np.sort(rng.integers(lo, hi, (b, nb)), axis=1).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(bb)
+
+
+@pytest.mark.parametrize("b,na,nb", [(1, 8, 8), (3, 64, 32), (2, 128, 96),
+                                     (1, 1016, 64), (2, 504, 128)])
+def test_merge_ranks_kernel_sweep(b, na, nb):
+    """Counts match the oracle AND numpy searchsorted on arbitrary run
+    lengths (1016 and 504 exercise the gcd tile fallback: gcd(.,128)=8)."""
+    rng = np.random.default_rng(b * 1000 + na + nb)
+    ka, kb = _sorted_runs(rng, b, na, nb)
+    ca, cb = merge_ranks_pallas(ka, kb, interpret=True)
+    wa, wb = ref.merge_ranks_ref(ka, kb)
+    np.testing.assert_array_equal(np.asarray(ca), np.asarray(wa))
+    np.testing.assert_array_equal(np.asarray(cb), np.asarray(wb))
+    for i in range(b):
+        np.testing.assert_array_equal(
+            np.asarray(ca[i]),
+            np.searchsorted(np.asarray(kb[i]), np.asarray(ka[i]), "left"))
+        np.testing.assert_array_equal(
+            np.asarray(cb[i]),
+            np.searchsorted(np.asarray(ka[i]), np.asarray(kb[i]), "right"))
+
+
+@pytest.mark.parametrize("tile", [8, 16, 64])
+def test_merge_ranks_kernel_tilings(tile):
+    rng = np.random.default_rng(11)
+    ka, kb = _sorted_runs(rng, 2, 128, 64)
+    got = merge_ranks_pallas(ka, kb, tile_x=tile, interpret=True)
+    want = ref.merge_ranks_ref(ka, kb)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_merge_ranks_all_ties_and_infs():
+    """Degenerate runs: every key equal, and +inf PAD tails (the pool
+    merge pads dead slots with +inf) — strict/non-strict must split them
+    exactly as searchsorted left/right does."""
+    ka = jnp.asarray([[2.0, 2.0, 2.0, 2.0, jnp.inf, jnp.inf, jnp.inf,
+                       jnp.inf]], jnp.float32)
+    kb = jnp.asarray([[2.0, 2.0, jnp.inf, jnp.inf, jnp.inf, jnp.inf,
+                       jnp.inf, jnp.inf]], jnp.float32)
+    ca, cb = merge_ranks_pallas(ka, kb, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ca)[0],
+                                  [0, 0, 0, 0, 2, 2, 2, 2])
+    np.testing.assert_array_equal(np.asarray(cb)[0],
+                                  [4, 4, 8, 8, 8, 8, 8, 8])
+
+
+def test_merge_ranks_ops_wrapper_unbatched():
+    """ops.merge_ranks accepts unbatched (N,) runs and strips the batch
+    axis back off; the ref path (REPRO_DISABLE_PALLAS) agrees."""
+    rng = np.random.default_rng(5)
+    ka, kb = _sorted_runs(rng, 1, 32, 16)
+    ca2, cb2 = ops.merge_ranks(ka, kb)              # batched
+    ca1, cb1 = ops.merge_ranks(ka[0], kb[0])        # unbatched
+    assert ca1.shape == (32,) and cb1.shape == (16,)
+    np.testing.assert_array_equal(np.asarray(ca1), np.asarray(ca2)[0])
+    np.testing.assert_array_equal(np.asarray(cb1), np.asarray(cb2)[0])
+    wa, wb = ref.merge_ranks_ref(ka, kb)
+    np.testing.assert_array_equal(np.asarray(ca2), np.asarray(wa))
+    np.testing.assert_array_equal(np.asarray(cb2), np.asarray(wb))

@@ -167,3 +167,45 @@ def test_router_gradient_pattern():
 
     g = jax.grad(f)(x)
     np.testing.assert_allclose(np.asarray(g)[0], [0.0, 2.0, 1.0])
+
+
+def test_merge_sorted_topk_kernel_path_bit_identical():
+    """use_kernel=True swaps the searchsorted rank computation for the
+    Pallas comparison-matrix kernel; the integer ranks are the same
+    numbers, so every output (keys, payload, dropped floor) must be
+    byte-identical — including on ties, where rank semantics live."""
+    for na, nb, keep, seed in [(16, 8, 16, 0), (12, 12, 6, 3),
+                               (24, 24, 30, 5), (32, 16, 20, 7)]:
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(np.sort(rng.integers(0, 6, na)), jnp.float32)
+        b = jnp.asarray(np.sort(rng.integers(0, 6, nb)), jnp.float32)
+        pa = jnp.asarray(np.arange(na), jnp.int32)
+        pb = jnp.asarray(1000 + np.arange(nb), jnp.int32)
+        da, db = a + 0.5, b + 0.5
+        want = merge_sorted_topk(a, b, pa, pb, keep, drop_a=da, drop_b=db)
+        got = merge_sorted_topk(a, b, pa, pb, keep, drop_a=da, drop_b=db,
+                                use_kernel=True)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_merge_sorted_topk_kernel_path_vmap():
+    """The kernel path under vmap (how the engine actually calls it):
+    batched runs, multidim payload, byte-identical to the default path."""
+    rng = np.random.default_rng(9)
+    batch, na, nb, keep, w = 4, 16, 8, 12, 3
+    a = jnp.asarray(np.sort(rng.integers(0, 5, (batch, na)), axis=1),
+                    jnp.float32)
+    b = jnp.asarray(np.sort(rng.integers(0, 5, (batch, nb)), axis=1),
+                    jnp.float32)
+    pa = jnp.asarray(rng.integers(0, 9, (batch, na, w)), jnp.int32)
+    pb = jnp.asarray(rng.integers(0, 9, (batch, nb, w)), jnp.int32)
+
+    def run(uk):
+        return jax.vmap(
+            lambda a, b, pa, pb: merge_sorted_topk(a, b, pa, pb, keep,
+                                                   use_kernel=uk)
+        )(a, b, pa, pb)
+
+    for g, w in zip(run(True), run(False)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
