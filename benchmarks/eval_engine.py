@@ -474,6 +474,86 @@ def engine_candidate_index(quick=True) -> List[Dict]:
     return rows
 
 
+def engine_store_persistence(quick=True) -> List[Dict]:
+    """Warm-start serving economics: cold ingest vs ``GraphStore.save``
+    vs warm ``GraphStore.open`` vs incremental ``add``.
+
+    One AIDS-like corpus is ingested from scratch (the cold path every
+    process pays without persistence), persisted, and reopened from the
+    snapshot; a small batch is then journal-appended to the open store.
+    Result parity between the fresh and the reopened store is a
+    *blocking* assertion — a persisted store that answers differently is
+    a bug, not a slow path — and the warm open must not re-pack
+    (``filter_packed_rows`` / ``index_signatures_built`` stay zero).
+    The timings themselves are informational; ``warm_open_speedup``
+    (bigger is better — ``tools/bench_diff.py`` treats the ``_speedup``
+    suffix as such) lands in the ``store_persistence`` section of
+    ``results/bench/BENCH_engine.json``.
+    """
+    import shutil
+    import tempfile
+
+    import jax
+
+    from repro.data.graphs import aids_like_graph, perturb
+    from repro.ged import GraphStore
+
+    rng = np.random.default_rng(23)
+    corpus_size = 120 if quick else 240
+    n_queries = 4 if quick else 8
+    n_append = 8 if quick else 16
+    tau = 4.0
+    corpus = [aids_like_graph(rng, int(rng.integers(8, 15)))
+              for _ in range(corpus_size)]
+    queries = [corpus[int(rng.integers(0, corpus_size))]
+               for _ in range(n_queries)]
+    extra = [perturb(rng, queries[i % n_queries], int(rng.integers(1, 4)),
+                     n_vlabels=62, n_elabels=3) for i in range(n_append)]
+
+    def make() -> GraphStore:
+        return GraphStore(corpus, batch_size=32, pool=512, expand=8,
+                          max_iters=512, cache=False)
+
+    make().search_batch(queries, tau)          # compile warm-up
+    fresh, cold_s = timed(make)
+    truth = fresh.search_batch(queries, tau)
+
+    store_dir = tempfile.mkdtemp(prefix="bench-graphstore-")
+    try:
+        _, save_s = timed(fresh.save, store_dir)
+        warm, open_s = timed(
+            GraphStore.open, store_dir, batch_size=32, pool=512,
+            expand=8, max_iters=512, cache=False)
+        got = warm.search_batch(queries, tau)
+        assert [[(h.graph_id, h.ged) for h in hs] for hs in got] \
+            == [[(h.graph_id, h.ged) for h in hs] for hs in truth], \
+            "reopened store changed a result set"
+        s = warm.stats
+        assert s["filter_packed_rows"] == 0, "warm open re-packed features"
+        assert s["index_signatures_built"] == 0, "warm open re-sketched"
+        _, append_s = timed(warm.add, extra)
+    finally:
+        shutil.rmtree(store_dir, ignore_errors=True)
+
+    row = {
+        "devices": jax.device_count(),
+        "corpus": len(corpus),
+        "appended": n_append,
+        "queries": n_queries,
+        "tau": tau,
+        "cold_ingest_s": cold_s,
+        "save_s": save_s,
+        "warm_open_s": open_s,
+        "append_s": append_s,
+        "warm_open_speedup": cold_s / max(open_s, 1e-9),
+    }
+    print_table("GraphStore persistence (cold vs warm vs append)", [row],
+                ["corpus", "appended", "cold_ingest_s", "save_s",
+                 "warm_open_s", "append_s", "warm_open_speedup"])
+    record_section("BENCH_engine", "store_persistence", [row])
+    return [row]
+
+
 ALL = (engine_agreement_and_throughput, engine_verification,
        engine_bound_ablation, engine_sweeps_ablation,
        engine_backend_throughput, engine_escalation_overlap,

@@ -27,7 +27,7 @@ def main() -> None:
                          "steps pass it so intent reads in the workflow)")
     ap.add_argument("--only", default="",
                     help="comma list: eval1..eval9, engine, index, "
-                         "kernels, eval_kernels, roofline")
+                         "persistence, kernels, eval_kernels, roofline")
     args = ap.parse_args()
     if args.full and args.quick:
         ap.error("--full and --quick are mutually exclusive")
@@ -66,6 +66,10 @@ def main() -> None:
                    eval_engine.engine_similarity_search,
                    eval_engine.scheduler_cost_model),
         "index": (eval_engine.engine_candidate_index,),
+        # "persistence" is the CI smoke tag for the durable-store rail:
+        # cold ingest vs save vs warm open vs journal append (fresh/warm
+        # result parity asserted inside, timings informational)
+        "persistence": (eval_engine.engine_store_persistence,),
         # "kernels" is the CI smoke tag: oracle validation plus the
         # autotune sweep -> persist -> reload -> dispatch probe (parity
         # asserted inside, timings informational)

@@ -25,6 +25,7 @@ opts out (benchmarks do, to time real work).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -73,6 +74,15 @@ class GedEngine:
     cache : keep an engine-level result cache (default True): duplicate
         pairs — within one batch or across calls — are answered from the
         cache instead of re-executing.  ``cache_size`` bounds it (LRU).
+    shared_cache_dir : directory for the *cross-process* result-cache
+        tier (default: the ``REPRO_GED_SHARED_CACHE_DIR`` environment
+        variable; unset means off).  An on-disk, file-locked LRU of
+        certified scalars (:class:`repro.store_io.SharedResultCache`)
+        layered *behind* the in-memory cache: probed on in-memory
+        misses (hits are promoted back into memory), written through
+        with every certified outcome, shared safely between concurrent
+        processes.  Counters appear in :attr:`stats` as
+        ``shared_cache_*``.
     compile_cache_dir : directory for jax's *persistent* compilation
         cache (default: the ``REPRO_GED_COMPILE_CACHE_DIR`` environment
         variable; unset means off).  Compiled engine executables are
@@ -135,6 +145,7 @@ class GedEngine:
                  max_in_flight: int = 4,
                  cache: bool = True,
                  cache_size: int = 4096,
+                 shared_cache_dir: Optional[str] = None,
                  compile_cache_dir: Optional[str] = None,
                  autotune_dir: Optional[str] = None,
                  digest: str = "exact",
@@ -156,6 +167,16 @@ class GedEngine:
         self.slots = slots
         self.vocab = vocab
         self._cache = ResultCache(cache_size) if cache else None
+        self._shared = None
+        if shared_cache_dir is None:
+            # repro.store_io.shared_cache.SHARED_CACHE_ENV; lazily
+            # imported below so the leaf modules stay cycle-free
+            shared_cache_dir = os.environ.get(
+                "REPRO_GED_SHARED_CACHE_DIR") or None
+        if shared_cache_dir:
+            from repro.store_io.shared_cache import SharedResultCache
+            self._shared = SharedResultCache(str(shared_cache_dir))
+        self.shared_cache_dir = shared_cache_dir
         self._backend: Backend = make_backend(
             backend, batch_size=batch_size, mesh=mesh, overlap=overlap,
             max_in_flight=max_in_flight)
@@ -312,6 +333,11 @@ class GedEngine:
             out["result_cache_entries"] = len(self._cache)
             out["index_pivot_hits"] = self._cache.pivot_hits
             out["index_pivot_misses"] = self._cache.pivot_misses
+        if self._shared is not None:
+            out["shared_cache_hits"] = self._shared.hits
+            out["shared_cache_misses"] = self._shared.misses
+            out["shared_cache_evictions"] = self._shared.evictions
+            out["shared_cache_entries"] = self._shared.entries()
         out.update(persistent_cache_stats())
         out.update(autotune_stats())
         return out
@@ -389,7 +415,7 @@ class GedEngine:
         run_idx = list(range(n))
         keys: List[Optional[tuple]] = [None] * n
         dup_of: Dict[int, int] = {}
-        if self._cache is not None:
+        if self._cache is not None or self._shared is not None:
             run_idx, seen = [], {}
             for i, (q, g) in enumerate(pairs):
                 keys[i] = pair_key(
@@ -399,9 +425,17 @@ class GedEngine:
                 if keys[i] in seen:
                     # duplicate within this batch: runs once, answers twice
                     dup_of[i] = seen[keys[i]]
-                    self._cache.hits += 1
+                    if self._cache is not None:
+                        self._cache.hits += 1
                     continue
-                hit = self._cache.get(keys[i])
+                hit = self._cache.get(keys[i]) \
+                    if self._cache is not None else None
+                if hit is None and self._shared is not None:
+                    # the cross-process tier answers in-memory misses;
+                    # promote hits so this process stops paying disk
+                    hit = self._shared.get(keys[i])
+                    if hit is not None and self._cache is not None:
+                        self._cache.put(keys[i], self._cache_view(hit))
                 if hit is not None:
                     results[i] = hit
                 else:
@@ -418,6 +452,8 @@ class GedEngine:
                 results[i] = o
                 if self._cache is not None:
                     self._cache.put(keys[i], self._cache_view(o))
+                if self._shared is not None:
+                    self._shared.put(keys[i], o)   # certified-only inside
         for i, j in dup_of.items():
             # a distinct outcome per position, so mutating one entry
             # cannot leak into its duplicates (or the cache)

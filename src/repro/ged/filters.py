@@ -50,34 +50,89 @@ class FilterIndex:
     """
 
     def __init__(self, graphs: Sequence[Graph], ids: Sequence[int],
-                 vocab: Vocab, executor: Optional[Executor] = None):
+                 vocab: Vocab, executor: Optional[Executor] = None,
+                 features: Optional[Dict[int, Tuple[Sequence[int],
+                                                    CorpusFeatures]]] = None):
         self.vocab = vocab
         self.executor = executor or Executor()
-        mult = self.executor.batch_multiple
-        by_slots: Dict[int, List[int]] = {}
-        for gid in ids:
-            by_slots.setdefault(slot_bucket(graphs[gid].n), []).append(gid)
         self.buckets: List[FeatureBucket] = []
-        for s in sorted(by_slots):
-            bids = by_slots[s]
-            feats = graph_features([graphs[i] for i in bids], vocab, width=s)
-            real = feats.batch
-            pad = -real % max(mult, 1)
-            if pad:
-                feats = CorpusFeatures(
-                    *(np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
-                      for a in (feats.vhist, feats.ehist, feats.degs,
-                                feats.n, feats.m)))
-            self.buckets.append(FeatureBucket(s, bids, feats, real))
+        self._fns: Dict[tuple, object] = {}
+        self.stats: Dict[str, float] = {"scans": 0, "scanned": 0,
+                                        "subset_scans": 0, "packed_rows": 0}
+        if features is None:
+            by_slots: Dict[int, List[int]] = {}
+            for gid in ids:
+                by_slots.setdefault(slot_bucket(graphs[gid].n),
+                                    []).append(gid)
+            for s in sorted(by_slots):
+                bids = by_slots[s]
+                feats = graph_features([graphs[i] for i in bids], vocab,
+                                       width=s)
+                self.stats["packed_rows"] += feats.batch
+                self.buckets.append(self._bucket(s, bids, feats))
+        else:
+            # warm open: per-bucket arrays come off disk (mmap-backed,
+            # unpadded — see repro.store_io.graphstore_io), so no
+            # feature packing runs; padding to the executor's shard
+            # multiple is the only per-open work
+            for s in sorted(features):
+                bids, feats = features[s]
+                self.buckets.append(self._bucket(int(s), list(bids), feats))
+        self._reindex()
+
+    def _bucket(self, slots: int, bids: List[int],
+                feats: CorpusFeatures) -> FeatureBucket:
+        """Pad unpadded per-bucket arrays to the executor's shard multiple
+        (a no-op copy-free pass-through on a single device)."""
+        real = feats.batch
+        pad = -real % max(self.executor.batch_multiple, 1)
+        if pad:
+            last = 1 if real else 0
+            feats = CorpusFeatures(
+                *(np.concatenate([a, np.repeat(a[-last:], pad, axis=0)])
+                  for a in (feats.vhist, feats.ehist, feats.degs,
+                            feats.n, feats.m)))
+        return FeatureBucket(slots, bids, feats, real)
+
+    def _reindex(self) -> None:
         # id order the scan output follows (bucket construction order)
         self.ids: List[int] = [gid for b in self.buckets for gid in b.ids]
         # id -> (bucket index, row within bucket), for subset gathers
         self._where: Dict[int, Tuple[int, int]] = {
             gid: (bi, ri) for bi, b in enumerate(self.buckets)
             for ri, gid in enumerate(b.ids)}
-        self._fns: Dict[tuple, object] = {}
-        self.stats: Dict[str, float] = {"scans": 0, "scanned": 0,
-                                        "subset_scans": 0}
+
+    def extend(self, graphs: Sequence[Graph], new_ids: Sequence[int]
+               ) -> None:
+        """Incrementally index ``new_ids``: pack only the new rows and
+        append them to their slot buckets (creating buckets as needed) —
+        the store's ``add()`` path, no full re-pack."""
+        by_slots: Dict[int, List[int]] = {}
+        for gid in new_ids:
+            by_slots.setdefault(slot_bucket(graphs[gid].n), []).append(gid)
+        at = {b.slots: bi for bi, b in enumerate(self.buckets)}
+        for s in sorted(by_slots):
+            bids = by_slots[s]
+            feats = graph_features([graphs[i] for i in bids], self.vocab,
+                                   width=s)
+            self.stats["packed_rows"] += feats.batch
+            bi = at.get(s)
+            if bi is None:
+                self.buckets.append(self._bucket(s, bids, feats))
+                self.buckets.sort(key=lambda b: b.slots)
+            else:
+                old = self.buckets[bi]
+                merged = CorpusFeatures(
+                    *(np.concatenate([np.asarray(a)[:old.real], b])
+                      for a, b in zip(
+                          (old.features.vhist, old.features.ehist,
+                           old.features.degs, old.features.n,
+                           old.features.m),
+                          (feats.vhist, feats.ehist, feats.degs,
+                           feats.n, feats.m))))
+                self.buckets[bi] = self._bucket(
+                    s, old.ids[:old.real] + bids, merged)
+        self._reindex()
 
     def __len__(self) -> int:
         return len(self.ids)

@@ -143,7 +143,8 @@ class CandidateIndex:
                  reps: int = 2, recall: Optional[float] = None,
                  max_pivots: int = 4, pivot_seeds: int = 0,
                  pivot_coverage: int = 32, pivot_min_candidates: int = 8,
-                 seed: int = 7):
+                 seed: int = 7, sigs: Optional[np.ndarray] = None,
+                 max_deg: Optional[int] = None):
         if recall is not None and not 0.0 < recall <= 1.0:
             raise ValueError(f"recall must be in (0, 1], got {recall!r}")
         if reps < 1:
@@ -156,16 +157,40 @@ class CandidateIndex:
         self.pivot_seeds = int(pivot_seeds)
         self.pivot_coverage = int(pivot_coverage)
         self.pivot_min_candidates = int(pivot_min_candidates)
+        self.seed = int(seed)
         self._graphs = graphs
         self.ids: List[int] = [int(i) for i in ids]
         self._pos_of: Dict[int, int] = {g: i for i, g in enumerate(self.ids)}
         self._fns: Dict[tuple, object] = {}
-        self.sigs = batch_signatures([graphs[i] for i in self.ids],
-                                     self.spec, executor, self._fns)
-        self._max_deg = max(
-            (int(graphs[i].degrees().max()) for i in self.ids
-             if graphs[i].n), default=0)
-        rng = np.random.default_rng(seed)
+        self.stats: Dict[str, float] = {
+            "probes": 0, "probe_candidates": 0, "probe_fallbacks": 0,
+            "tables_built": 0, "pivot_queries": 0, "pivot_lookups": 0,
+            "pivots": 0, "seeded_pairs": 0, "nearest_calls": 0,
+            "signatures_built": 0,
+        }
+        if sigs is not None:
+            # restored from a persisted store (repro.store_io): the
+            # signature matrix comes off disk — possibly mmap-backed —
+            # so no device build runs; band tables rebuild lazily from
+            # it, bit-identical (they are a deterministic function of
+            # sigs + the seeded permutations)
+            sigs = np.asarray(sigs)
+            if sigs.shape != (len(self.ids), self.spec.dims):
+                raise ValueError(
+                    f"restored sigs shape {sigs.shape} does not match "
+                    f"({len(self.ids)}, {self.spec.dims})")
+            self.sigs = sigs
+        else:
+            self.sigs = batch_signatures([graphs[i] for i in self.ids],
+                                         self.spec, executor, self._fns)
+            self.stats["signatures_built"] += len(self.ids)
+        if max_deg is not None:
+            self._max_deg = int(max_deg)
+        else:
+            self._max_deg = max(
+                (int(graphs[i].degrees().max()) for i in self.ids
+                 if graphs[i].n), default=0)
+        rng = np.random.default_rng(self.seed)
         self._perms = [rng.permutation(self.spec.dims)
                        for _ in range(self.reps)]
         self._rng = rng
@@ -177,14 +202,32 @@ class CandidateIndex:
         self._pivots: Dict[int, None] = {}
         self._engine = None
         self._digests: Dict[int, bytes] = {}
-        self.stats: Dict[str, float] = {
-            "probes": 0, "probe_candidates": 0, "probe_fallbacks": 0,
-            "tables_built": 0, "pivot_queries": 0, "pivot_lookups": 0,
-            "pivots": 0, "seeded_pairs": 0, "nearest_calls": 0,
-        }
 
     def __len__(self) -> int:
         return len(self.ids)
+
+    def extend(self, graphs: Sequence[Graph], new_ids: Sequence[int],
+               executor: Optional[Executor] = None) -> None:
+        """Incrementally index ``new_ids``: build signatures for the new
+        rows only, append them to the resident matrix, and invalidate
+        the lazily-built band tables (they rebuild on the next probe
+        from the merged matrix — deterministic, so probes after an
+        ``extend`` match a from-scratch build over the same ids)."""
+        new_ids = [int(i) for i in new_ids]
+        if not new_ids:
+            return
+        new_sigs = batch_signatures([graphs[i] for i in new_ids],
+                                    self.spec, executor, self._fns)
+        self.stats["signatures_built"] += len(new_ids)
+        self.sigs = np.concatenate([np.asarray(self.sigs), new_sigs]) \
+            if len(self.sigs) else new_sigs
+        for gid in new_ids:
+            self._pos_of[gid] = len(self.ids)
+            self.ids.append(gid)
+        self._tables.clear()
+        deg = max((int(graphs[i].degrees().max()) for i in new_ids
+                   if graphs[i].n), default=0)
+        self._max_deg = max(self._max_deg, deg)
 
     @property
     def exact(self) -> bool:

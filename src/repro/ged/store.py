@@ -37,13 +37,27 @@ Queries run a staged filter-verify pipeline:
 Results come back as ranked :class:`~repro.ged.results.SearchHit` objects
 (corpus id + outcome + the stage that decided it); ``store.stats`` is part
 of the API contract — candidates per stage, filter ratio, verified count.
+
+A store is also **durable**: :meth:`GraphStore.save` writes a compacted,
+checksummed snapshot (graphs, digests, dedup groups, the packed stage-0
+feature buckets and the stage −1 sketch matrix — the
+:mod:`repro.store_io` layout) and :meth:`GraphStore.open` brings it back
+without re-ingesting: feature arrays and the signature matrix come
+straight off disk (mmap-backed), so a warm open re-packs and re-hashes
+nothing yet answers queries bit-identically.  :meth:`add` /
+:meth:`remove` mutate an attached store through a write-ahead journal
+that is folded into a fresh snapshot by :meth:`compact` (or
+automatically every ``compact_every`` entries).  See
+``docs/persistence.md`` for the on-disk contract.
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -59,6 +73,7 @@ from repro.ged.results import (STAGE_BOUND, STAGE_FILTER, STAGE_INDEX,
                                STAGE_VERIFY, GedOutcome, SearchHit)
 
 _INF = float("inf")
+_ZERO16 = b"\x00" * 16
 
 
 class GraphStore:
@@ -95,6 +110,11 @@ class GraphStore:
     Remaining keyword arguments go to the :class:`GedEngine` constructor
     (``cache=``, ``pool=``, ``batch_size=`` ...).
 
+    Corpus ids are stable handles: :meth:`add` assigns fresh ids past
+    every id ever issued and :meth:`remove` tombstones (ids are never
+    reused), so persisted results, journals and shared caches stay valid
+    across mutations.
+
     Examples
     --------
     >>> from repro import ged
@@ -108,6 +128,11 @@ class GraphStore:
     >>> flat = ged.GraphStore([([0], [])], backend="exact", index=None)
     >>> flat.stats["candidates_stage_-1"]      # stage -1 never runs
     0
+    >>> import tempfile                        # durable round trip
+    >>> path = store.save(tempfile.mkdtemp())
+    >>> warm = ged.GraphStore.open(path, backend="exact")
+    >>> [h.graph_id for h in warm.range_search(([0, 1], [(0, 1, 1)]), 0.5)]
+    [0]
     """
 
     def __init__(self, graphs, *, vocab: Optional[Vocab] = None,
@@ -118,6 +143,42 @@ class GraphStore:
         if digest not in DIGESTS:
             raise ValueError(f"unknown digest {digest!r}; "
                              f"expected one of {sorted(DIGESTS)}")
+        self.digest = digest
+        self.filter_iters = int(filter_iters)
+        self.filter_pool = int(filter_pool)
+        self._index_spec = self._normalize_index(index)
+        self.graphs: List[Optional[Graph]] = [as_graph(g) for g in graphs]
+        self._tombstones: Set[int] = set()
+        self._store_dir: Optional[str] = None
+        self._journal_seq = 0
+        self._journal_base = 0
+        self.compact_every = 64
+        self._dedup_checks = 0
+        self._init_engine(backend, mesh, engine, engine_options)
+        self._init_counts()
+        t0 = time.perf_counter()
+        self._ingest(range(len(self.graphs)), vocab)
+        self._counts["ingest_wall_s"] += time.perf_counter() - t0
+        self._n_live = len(self.graphs)
+
+    # ------------------------------------------------------------- setup
+
+    @staticmethod
+    def _normalize_index(index):
+        """``index=`` argument -> ``None`` | knob dict | prebuilt index."""
+        if index is None or isinstance(index, CandidateIndex):
+            return index
+        if isinstance(index, dict):
+            return dict(index)
+        if index in ("auto", True):
+            return {}
+        raise ValueError(
+            f"index= expects None, 'auto', a knob dict, or a "
+            f"CandidateIndex; got {index!r}")
+
+    def _init_engine(self, backend: str, mesh,
+                     engine: Optional[GedEngine],
+                     engine_options: Dict) -> None:
         if engine is not None and (backend != "auto" or mesh is not None
                                    or engine_options):
             # a supplied engine brings its own backend, placement and
@@ -128,25 +189,63 @@ class GraphStore:
             raise TypeError(
                 f"engine= is exclusive with engine construction options "
                 f"(got {clash}); configure the engine you pass in")
-        self.graphs: List[Graph] = [as_graph(g) for g in graphs]
-        self.digest = digest
-        # Byte-identical grouping first (always sound), then — under the
-        # "wl" digest — isomorphism candidates via WL collision, each
-        # merge *confirmed* by a certified GED == 0 check so a WL
-        # collision between non-isomorphic graphs can never alias answers.
+        if engine is None:
+            # The engine's result cache stays on exact digests: WL keys
+            # would alias WL-equivalent non-isomorphic pairs *without*
+            # the certified confirmation the store's dedup gets.
+            engine = GedEngine(backend, mesh=mesh, **engine_options)
+        self.engine = engine
+        executor = getattr(engine._backend, "executor", None)
+        if executor is None:
+            executor = ShardedExecutor(mesh) if mesh is not None \
+                else Executor()
+        self.executor = executor
+        self._filter_cfg = None
+        if self.filter_iters:
+            self._filter_cfg = dataclasses.replace(
+                engine.config, pool=int(self.filter_pool), expand=2,
+                max_iters=int(self.filter_iters))
+
+    def _init_counts(self) -> None:
+        self._counts: Dict[str, float] = {
+            "queries": 0, "candidates": 0, "candidates_stage_-1": 0,
+            "index_pruned": 0, "index_sketch_pruned": 0,
+            "index_pivot_pruned": 0, "stage0_pruned": 0,
+            "stage1_decided": 0, "stage1_accepted": 0,
+            "stage2_verified": 0, "hits": 0, "topk_candidates": 0,
+            "topk_verified": 0, "topk_seeded": 0, "adds": 0,
+            "removals": 0, "compactions": 0, "index_wall_s": 0.0,
+            "scan_wall_s": 0.0, "bound_wall_s": 0.0, "verify_wall_s": 0.0,
+            "ingest_wall_s": 0.0, "vocab_wall_s": 0.0, "pack_wall_s": 0.0,
+            "open_wall_s": 0.0,
+        }
+
+    def _ingest(self, present, vocab: Optional[Vocab] = None) -> None:
+        """Derive everything :meth:`open` otherwise restores from disk:
+        dedup groups, the shared vocabulary, the resident stage-0 feature
+        buckets and the stage −1 sketch index — over ``self.graphs[i]``
+        for the ids in ``present``.
+
+        Byte-identical grouping first (always sound), then — under the
+        ``"wl"`` digest — isomorphism candidates via WL collision, each
+        merge *confirmed* by a certified GED == 0 check so a WL collision
+        between non-isomorphic graphs can never alias answers.
+        """
+        present = [int(i) for i in present]
         exact_groups: Dict[bytes, List[int]] = {}
-        for i, g in enumerate(self.graphs):
-            exact_groups.setdefault(graph_digest(g), []).append(i)
+        for i in present:
+            exact_groups.setdefault(graph_digest(self.graphs[i]),
+                                    []).append(i)
         self._exact_of: Dict[bytes, int] = {
             d: ids[0] for d, ids in exact_groups.items()}
-        self._dedup_checks = 0
         groups: List[List[int]] = []
-        if digest == "wl":
+        wl_of: Dict[int, bytes] = {}
+        if self.digest == "wl":
             candidates: Dict[bytes, List[List[int]]] = {}
             for ids in exact_groups.values():
                 candidates.setdefault(wl_digest(self.graphs[ids[0]]),
                                       []).append(ids)
-            for subs in candidates.values():
+            for wd, subs in candidates.items():
                 # compare against every group already formed in this WL
                 # bucket (not just the first), so two isomorphic entries
                 # still merge when a non-isomorphic collider sorts first
@@ -161,75 +260,418 @@ class GraphStore:
                             break
                     else:       # no confirmed match: its own group
                         formed.append(list(sub))
-                groups.extend(sorted(g) for g in formed)
+                for grp in formed:
+                    grp = sorted(grp)
+                    groups.append(grp)
+                    wl_of[grp[0]] = wd
         else:
             groups.extend(exact_groups.values())
         self._members: Dict[int, List[int]] = {
             ids[0]: sorted(ids) for ids in groups}
         self._rep_of: Dict[int, int] = {
             i: rep for rep, ids in self._members.items() for i in ids}
-        self._rep_ids: List[int] = sorted(self._members)
+        self._wl_of: Dict[int, bytes] = wl_of
+        self._wl_reps: Dict[bytes, List[int]] = {}
+        for rep, wd in wl_of.items():
+            self._wl_reps.setdefault(wd, []).append(rep)
+        self._rep_ids: List[int] = sorted(
+            rep for rep, ids in self._members.items()
+            if any(i not in self._tombstones for i in ids))
 
-        self.vocab: Vocab = (merge_vocab(vocab, self.graphs) if vocab
-                             else graphs_vocab(self.graphs))
-        if engine is None:
-            # The engine's result cache stays on exact digests: WL keys
-            # would alias WL-equivalent non-isomorphic pairs *without*
-            # the certified confirmation the dedup above gets.
-            engine = GedEngine(backend, mesh=mesh, **engine_options)
-        self.engine = engine
-        executor = getattr(engine._backend, "executor", None)
-        if executor is None:
-            executor = ShardedExecutor(mesh) if mesh is not None \
-                else Executor()
-        self.executor = executor
-        self._filter_cfg = None
-        if filter_iters:
-            self._filter_cfg = dataclasses.replace(
-                engine.config, pool=int(filter_pool), expand=2,
-                max_iters=int(filter_iters))
+        t0 = time.perf_counter()
+        live = [self.graphs[i] for i in present]
+        self.vocab: Vocab = (merge_vocab(vocab, live) if vocab
+                             else graphs_vocab(live))
+        self._counts["vocab_wall_s"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
         self._index = FilterIndex(self.graphs, self._rep_ids, self.vocab,
                                   self.executor)
-        if index is None:
+        spec = self._index_spec
+        if spec is None:
             self._cindex: Optional[CandidateIndex] = None
-        elif isinstance(index, CandidateIndex):
-            self._cindex = index
+        elif isinstance(spec, CandidateIndex):
+            self._cindex = spec
         else:
-            knobs = dict(index) if isinstance(index, dict) else {}
-            if not isinstance(index, dict) and index not in ("auto", True):
-                raise ValueError(
-                    f"index= expects None, 'auto', a knob dict, or a "
-                    f"CandidateIndex; got {index!r}")
             self._cindex = CandidateIndex(
-                self.graphs, self._rep_ids, executor=self.executor, **knobs)
+                self.graphs, self._rep_ids, executor=self.executor, **spec)
+        self._counts["pack_wall_s"] += time.perf_counter() - t0
+        self._bind_index()
         if self._cindex is not None:
+            self._cindex.seed_pivots(vocab=self.vocab)
+
+    def _bind_index(self, digests: Optional[Dict[int, bytes]] = None
+                    ) -> None:
+        if self._cindex is None:
+            return
+        if digests is None:
             # pivot lookups reuse the store's ingest-time exact digests
             # when the engine caches on them — no per-probe re-hashing
             digests = ({rid: d for d, rid in self._exact_of.items()
                         if rid in self._members}
                        if self.engine.digest == "exact" else None)
-            self._cindex.bind_engine(self.engine, digests)
-            self._cindex.seed_pivots(vocab=self.vocab)
-        self._counts: Dict[str, float] = {
-            "queries": 0, "candidates": 0, "candidates_stage_-1": 0,
-            "index_pruned": 0, "index_sketch_pruned": 0,
-            "index_pivot_pruned": 0, "stage0_pruned": 0,
-            "stage1_decided": 0, "stage1_accepted": 0, "stage2_verified": 0,
-            "hits": 0, "topk_candidates": 0, "topk_verified": 0,
-            "topk_seeded": 0, "index_wall_s": 0.0,
-            "scan_wall_s": 0.0, "bound_wall_s": 0.0, "verify_wall_s": 0.0,
-        }
+        self._cindex.bind_engine(self.engine, digests)
 
     def __len__(self) -> int:
-        return len(self.graphs)
+        return self._n_live
 
     def member_id(self, graph) -> Optional[int]:
-        """Corpus id of a *byte-identical* ingested graph, or ``None``.
+        """Corpus id of a *live, byte-identical* ingested graph, or
+        ``None``.
 
         Deliberately exact (not WL): request routing must never match a
         merely WL-equivalent graph, whose true distance could differ.
         """
         return self._exact_of.get(graph_digest(as_graph(graph)))
+
+    # ------------------------------------------------------- persistence
+
+    def save(self, store_dir) -> str:
+        """Write a durable, compacted snapshot and attach the store to
+        ``store_dir`` (subsequent :meth:`add` / :meth:`remove` journal
+        there).  Checksummed ``.npy`` segments plus an atomic manifest —
+        a crash mid-save leaves any previous snapshot fully readable.
+        Returns ``store_dir``.
+        """
+        from repro.store_io import graphstore_io
+        store_dir = str(store_dir)
+        graphstore_io.save_store(self, store_dir)
+        self._store_dir = store_dir
+        self._journal_base = self._journal_seq
+        return store_dir
+
+    def compact(self) -> None:
+        """Fold the journal into a fresh snapshot generation (also runs
+        automatically every ``compact_every`` journal entries)."""
+        if self._store_dir is None:
+            raise RuntimeError(
+                "store is not attached to a directory; call save() first")
+        from repro.store_io import graphstore_io
+        graphstore_io.save_store(self, self._store_dir)
+        self._journal_base = self._journal_seq
+        self._counts["compactions"] += 1
+
+    def _maybe_compact(self) -> None:
+        if (self._store_dir is not None and self.compact_every
+                and self._journal_seq - self._journal_base
+                >= self.compact_every):
+            self.compact()
+
+    @classmethod
+    def open(cls, store_dir, *, mesh=None,
+             engine: Optional[GedEngine] = None, backend: str = "auto",
+             graphs=None, **engine_options):
+        """Reopen a persisted store without re-ingesting.
+
+        The warm path mmaps the persisted feature buckets and sketch
+        matrix straight into the resident structures — no feature
+        packing, no signature builds, no dedup checks — and then replays
+        any journal entries newer than the snapshot; queries against the
+        result are bit-identical to the store that saved it.  Corrupt or
+        truncated *derived* segments (digests, groups, features,
+        sketches) are re-derived from the persisted graphs with a
+        warning; corrupt *primary* segments raise — unless ``graphs=``
+        supplies the original corpus, in which case the store warns,
+        re-ingests it (with this call's store defaults) and re-saves.
+
+        ``mesh`` / ``engine`` / ``backend`` and engine keyword options
+        mean the same as in the constructor; store-level knobs
+        (``digest``, ``filter_iters``, ``filter_pool``, index
+        configuration) come from the snapshot itself.
+        """
+        from repro.store_io import graphstore_io
+        from repro.store_io.atomic import StoreIOError
+        store_dir = str(store_dir)
+        t_open = time.perf_counter()
+        try:
+            payload = graphstore_io.read_store_manifest(store_dir)
+            primary = graphstore_io.load_primary(store_dir, payload)
+            base = int(payload.get("journal_base", 0))
+            ops, top = graphstore_io.load_journal(store_dir, base)
+        except StoreIOError as err:
+            if graphs is None:
+                raise
+            warnings.warn(
+                f"persisted store at {store_dir!r} is unreadable ({err}); "
+                f"re-ingesting the supplied graphs and re-saving",
+                RuntimeWarning, stacklevel=2)
+            store = cls(graphs, mesh=mesh, engine=engine, backend=backend,
+                        **engine_options)
+            store.save(store_dir)
+            store._counts["open_wall_s"] += time.perf_counter() - t_open
+            return store
+
+        self = object.__new__(cls)
+        self.digest = payload["digest"]
+        self.filter_iters = int(payload["filter_iters"])
+        self.filter_pool = int(payload["filter_pool"])
+        meta = payload.get("index")
+        self._index_spec = dict(meta["knobs"]) if meta else None
+        self._dedup_checks = int(payload.get("dedup_checks", 0))
+        self._store_dir = None          # journal replay must not re-journal
+        self._journal_seq = top
+        self._journal_base = base
+        self.compact_every = 64
+        self.graphs = [None] * int(primary["next_id"])
+        for gid, g in zip(primary["ids"], primary["graphs"]):
+            self.graphs[gid] = g
+        self._tombstones = {gid for gid, d
+                            in zip(primary["ids"], primary["dead"]) if d}
+        self._init_engine(backend, mesh, engine, engine_options)
+        self._init_counts()
+        vocab = (tuple(int(v) for v in payload["vocab"][0]),
+                 tuple(int(v) for v in payload["vocab"][1]))
+        try:
+            self._restore_derived(
+                graphstore_io.load_derived(store_dir, payload,
+                                           primary["ids"]),
+                primary["ids"], vocab)
+        except StoreIOError as err:
+            warnings.warn(
+                f"derived segments at {store_dir!r} are corrupt ({err}); "
+                f"re-deriving from the persisted graphs", RuntimeWarning,
+                stacklevel=2)
+            t0 = time.perf_counter()
+            self._ingest(primary["ids"], vocab)
+            self._counts["ingest_wall_s"] += time.perf_counter() - t0
+        self._n_live = sum(1 for gid, g in enumerate(self.graphs)
+                           if g is not None
+                           and gid not in self._tombstones)
+        for op in ops:
+            self._replay(op)
+        self._store_dir = store_dir
+        self._counts["open_wall_s"] += time.perf_counter() - t_open
+        return self
+
+    def _restore_derived(self, derived: Dict, ids: List[int],
+                         vocab: Vocab) -> None:
+        """Wire mmap-backed segments straight into the resident
+        structures — the warm path: no dedup checks, no feature packing,
+        no signature builds (the counter contract the persistence tests
+        pin).  Any inconsistency raises so :meth:`open` falls back to
+        :meth:`_ingest` over the persisted graphs.
+        """
+        from repro.store_io.atomic import CorruptStoreError
+        self.vocab = vocab
+        self._exact_of = {}
+        for gid, d in zip(ids, derived["exact"]):       # ids ascending:
+            if gid not in self._tombstones \
+                    and d not in self._exact_of:        # lowest live wins
+                self._exact_of[d] = gid
+        self._rep_of = dict(zip(ids, derived["rep_of"]))
+        members: Dict[int, List[int]] = {}
+        for gid in ids:
+            members.setdefault(self._rep_of[gid], []).append(gid)
+        if any(self._rep_of.get(rep) != rep for rep in members):
+            raise CorruptStoreError(
+                "dedup group assignment is inconsistent")
+        self._members = {rep: sorted(ms)
+                         for rep, ms in sorted(members.items())}
+        self._wl_of = {}
+        self._wl_reps = {}
+        if self.digest == "wl":
+            wl = dict(zip(ids, derived["wl"]))
+            for rep in self._members:
+                wd = wl.get(rep, _ZERO16)
+                if wd != _ZERO16:
+                    self._wl_of[rep] = wd
+                    self._wl_reps.setdefault(wd, []).append(rep)
+        self._rep_ids = sorted(
+            rep for rep, ms in self._members.items()
+            if any(m not in self._tombstones for m in ms))
+
+        have = {gid for bids, _ in derived["features"].values()
+                for gid in bids}
+        if have != set(self._rep_ids):
+            raise CorruptStoreError(
+                "feature buckets do not cover the dedup representatives")
+        self._index = FilterIndex(self.graphs, self._rep_ids, self.vocab,
+                                  self.executor,
+                                  features=derived["features"])
+        idx = derived["index"]
+        if self._index_spec is None or idx is None:
+            self._cindex = None
+        else:
+            if set(idx["ids"]) != set(self._rep_ids):
+                raise CorruptStoreError(
+                    "index sketch rows do not cover the dedup "
+                    "representatives")
+            self._cindex = CandidateIndex(
+                self.graphs, idx["ids"], executor=self.executor,
+                sigs=idx["sigs"], max_deg=idx["max_deg"], **idx["knobs"])
+            for p in idx["pivots"]:
+                self._cindex.note_pivot(p)
+        self._bind_index()
+
+    def _replay(self, op: Dict) -> None:
+        from repro.store_io.atomic import CorruptStoreError
+        kind = op.get("op")
+        if kind == "add":
+            new = op.get("graphs", [])
+            ids = [int(i) for i in op.get("ids", [])]
+            if ids != list(range(len(self.graphs),
+                                 len(self.graphs) + len(new))):
+                raise CorruptStoreError(
+                    "journal add entry is out of sequence")
+            self.graphs.extend(new)
+            self._counts["adds"] += len(new)
+            self._apply_add(ids)
+        elif kind == "remove":
+            ids = [int(i) for i in op.get("ids", [])]
+            self._counts["removals"] += len(ids)
+            self._apply_remove(ids)
+        else:
+            raise CorruptStoreError(f"unknown journal op {kind!r}")
+
+    # --------------------------------------------------------- mutation
+
+    def add(self, graphs) -> List[int]:
+        """Ingest additional graphs incrementally; returns their ids.
+
+        Dedup (exact match, then certified WL merge against existing
+        groups), vocabulary growth and index maintenance all match a
+        fresh ingest of the combined corpus — only the new rows are
+        packed and sketched, unless a new label grows the vocabulary
+        (histogram widths change, forcing one stage-0 re-pack).  On an
+        attached store the batch is journaled write-ahead before it is
+        applied.
+        """
+        new = [as_graph(g) for g in graphs]
+        if not new:
+            return []
+        ids = list(range(len(self.graphs), len(self.graphs) + len(new)))
+        if self._store_dir is not None:
+            from repro.store_io import graphstore_io
+            self._journal_seq += 1
+            graphstore_io.append_journal(
+                self._store_dir, self._journal_seq,
+                {"op": "add", "ids": ids}, new)
+        self.graphs.extend(new)
+        self._counts["adds"] += len(new)
+        self._apply_add(ids)
+        self._maybe_compact()
+        return ids
+
+    def remove(self, ids: Sequence[int]) -> None:
+        """Tombstone corpus entries (their ids are never reused).
+
+        Raises ``KeyError`` if any id is unknown or already removed —
+        checked up front, before anything is journaled or applied.  A
+        removed representative keeps serving as its group's resident
+        probe object until the group's last member is gone; fully-dead
+        groups leave the candidate set immediately and are dropped from
+        disk at the next compaction.
+        """
+        ids = [int(i) for i in ids]
+        seen: Set[int] = set()
+        for gid in ids:
+            if (gid in seen or gid not in self._rep_of
+                    or gid in self._tombstones):
+                raise KeyError(
+                    f"graph id {gid} is not a live member of this store")
+            seen.add(gid)
+        if not ids:
+            return
+        if self._store_dir is not None:
+            from repro.store_io import graphstore_io
+            self._journal_seq += 1
+            graphstore_io.append_journal(
+                self._store_dir, self._journal_seq,
+                {"op": "remove", "ids": ids})
+        self._counts["removals"] += len(ids)
+        self._apply_remove(ids)
+        self._maybe_compact()
+
+    def _apply_add(self, ids: List[int]) -> None:
+        t0 = time.perf_counter()
+        new = [self.graphs[i] for i in ids]
+        merged = merge_vocab(self.vocab, new)
+        self._counts["vocab_wall_s"] += time.perf_counter() - t0
+        live = set(self._rep_ids)
+        new_reps: List[int] = []
+        new_digests: Dict[int, bytes] = {}
+        for gid in ids:
+            g = self.graphs[gid]
+            d = graph_digest(g)
+            owner = self._exact_of.get(d)
+            wd = None
+            rep = None
+            if owner is not None:
+                rep = self._rep_of[owner]
+            elif self.digest == "wl":
+                wd = wl_digest(g)
+                for cand in self._wl_reps.get(wd, []):
+                    self._dedup_checks += 1
+                    if ged_verify(self.graphs[cand], g, 0.0,
+                                  bound="BMa").similar:
+                        rep = cand
+                        break
+            if rep is not None:
+                self._members[rep].append(gid)
+                self._members[rep].sort()
+                self._rep_of[gid] = rep
+                if d not in self._exact_of:
+                    self._exact_of[d] = gid
+                if rep not in live:
+                    # a fully-dead group revived by a new member; its rep
+                    # is already resident in every index structure
+                    live.add(rep)
+                    bisect.insort(self._rep_ids, rep)
+            else:
+                self._members[gid] = [gid]
+                self._rep_of[gid] = gid
+                self._exact_of[d] = gid
+                if self.digest == "wl":
+                    self._wl_of[gid] = wd
+                    self._wl_reps.setdefault(wd, []).append(gid)
+                live.add(gid)
+                bisect.insort(self._rep_ids, gid)
+                new_reps.append(gid)
+                new_digests[gid] = d
+        self._n_live += len(ids)
+        t0 = time.perf_counter()
+        if merged != self.vocab:
+            # stage-0 features are vocabulary-indexed histograms: label
+            # growth changes every row's width, forcing one full re-pack
+            # (the sketch matrix is vocabulary-independent and keeps its
+            # rows)
+            self.vocab = merged
+            self._index = FilterIndex(self.graphs, self._rep_ids,
+                                      self.vocab, self.executor)
+        elif new_reps:
+            self._index.extend(self.graphs, new_reps)
+        if self._cindex is not None and new_reps:
+            self._cindex.extend(self.graphs, new_reps,
+                                executor=self.executor)
+            if self.engine.digest == "exact":
+                self._cindex.bind_engine(self.engine, new_digests)
+        self._counts["pack_wall_s"] += time.perf_counter() - t0
+
+    def _apply_remove(self, ids: List[int]) -> None:
+        for gid in ids:
+            if gid in self._tombstones or gid not in self._rep_of:
+                continue            # journal replay tolerates re-removal
+            self._tombstones.add(gid)
+            self._n_live -= 1
+            rep = self._rep_of[gid]
+            d = graph_digest(self.graphs[gid])
+            if self._exact_of.get(d) == gid:
+                # hand the digest to the lowest live byte-identical
+                # member, so member_id routing never returns a tombstone
+                repl = next(
+                    (m for m in self._members[rep]
+                     if m not in self._tombstones
+                     and graph_digest(self.graphs[m]) == d), None)
+                if repl is None:
+                    del self._exact_of[d]
+                else:
+                    self._exact_of[d] = repl
+            if all(m in self._tombstones for m in self._members[rep]):
+                # group fully dead: out of the candidate set (its resident
+                # rows stay; scans keyed by _rep_ids never read them)
+                i = bisect.bisect_left(self._rep_ids, rep)
+                if i < len(self._rep_ids) and self._rep_ids[i] == rep:
+                    del self._rep_ids[i]
 
     # ------------------------------------------------------------ search
 
@@ -269,7 +711,7 @@ class GraphStore:
         brute-force ``(ged, id)`` sort.
         """
         k = int(k)
-        if k <= 0 or not self.graphs:
+        if k <= 0 or not self._rep_ids:
             return []
         q = as_graph(query)
         self._counts["queries"] += 1
@@ -282,7 +724,10 @@ class GraphStore:
         seeds: List[int] = []
         if self._cindex is not None and len(order) > chunk:
             t0 = time.perf_counter()
-            seeds = self._cindex.nearest(q, limit=max(2 * k, chunk))
+            rset = set(self._rep_ids)   # nearest() may surface dead reps
+            seeds = [rid for rid
+                     in self._cindex.nearest(q, limit=max(2 * k, chunk))
+                     if rid in rset]
             self._counts["topk_seeded"] += len(seeds)
             seedset = set(seeds)
             order = seeds + [rid for rid in order if rid not in seedset]
@@ -338,12 +783,12 @@ class GraphStore:
         graphs pays full verification only for undecided pairs — this is
         what :class:`repro.serving.GedVerificationService` routes batch
         traffic through once a corpus is registered.  ``taus`` is a
-        scalar or one threshold per id.
+        scalar or one threshold per id.  Removed ids raise ``KeyError``.
         """
         q = as_graph(query)
         ids = [int(i) for i in ids]
         for gid in ids:
-            if gid not in self._rep_of:
+            if gid not in self._rep_of or gid in self._tombstones:
                 raise KeyError(f"graph id {gid} is not in this store")
         taus = np.broadcast_to(
             np.asarray(taus, dtype=np.float64), (len(ids),))
@@ -390,9 +835,15 @@ class GraphStore:
         per-stage wall splits (``index_wall_s`` / ``scan_wall_s`` /
         ``bound_wall_s`` / ``verify_wall_s``), top-k counters
         (``topk_seeded`` — index-suggested candidates verified first),
-        dedup totals, the candidate index's own counters under
-        ``index_*`` (probes, fallbacks, tables built, pivot traffic),
-        and the engine's counters under ``engine_*`` (including
+        dedup totals, mutation/persistence counters (``adds`` /
+        ``removals`` / ``compactions`` / ``journal_pending`` and the
+        ``ingest_wall_s`` = ``vocab_wall_s`` + ``pack_wall_s`` + dedup
+        ingest split, ``open_wall_s`` for warm opens), the stage-0
+        scan's own counters under ``filter_*`` (``filter_packed_rows``
+        is 0 after a warm open — nothing was re-packed), the candidate
+        index's under ``index_*`` (probes, fallbacks, tables built,
+        pivot traffic, ``index_signatures_built`` — likewise 0 after a
+        warm open), and the engine's under ``engine_*`` (including
         ``engine_index_pivot_hits`` / ``_misses`` — result-cache traffic
         from pivot lookups).
         """
@@ -401,8 +852,11 @@ class GraphStore:
         out["filter_ratio"] = \
             (cand - out["stage2_verified"]) / cand if cand else 0.0
         out["dedup_groups"] = len(self._rep_ids)
-        out["dedup_duplicates"] = len(self.graphs) - len(self._rep_ids)
+        out["dedup_duplicates"] = self._n_live - len(self._rep_ids)
         out["dedup_checks"] = self._dedup_checks
+        out["journal_pending"] = self._journal_seq - self._journal_base
+        out.update({f"filter_{k}": v
+                    for k, v in self._index.stats.items()})
         if self._cindex is not None:
             out.update({f"index_{k}": v
                         for k, v in self._cindex.stats.items()})
@@ -545,10 +999,11 @@ class GraphStore:
 
     def _group_hits(self, rid: int, outcome: GedOutcome,
                     stage: int) -> List[SearchHit]:
-        """Hits for every corpus entry sharing ``rid``'s digest group."""
+        """Hits for every *live* corpus entry in ``rid``'s digest group."""
         return [SearchHit(gid, outcome if gid == rid else self._dup(outcome),
                           stage)
-                for gid in self._members[rid]]
+                for gid in self._members[rid]
+                if gid not in self._tombstones]
 
     def _dup(self, outcome: GedOutcome) -> GedOutcome:
         """A duplicate corpus entry's copy of its representative's answer.

@@ -104,11 +104,8 @@ def _table_path(path: str) -> str:
 
 def _load(path: str) -> Dict[str, Dict]:
     """Read a tuning table; corrupt or alien files recover to empty."""
-    try:
-        with open(_table_path(path)) as f:
-            raw = json.load(f)
-    except (OSError, ValueError):
-        return {}
+    from repro.store_io.atomic import read_json_or_none
+    raw = read_json_or_none(_table_path(path))
     if not isinstance(raw, dict) or raw.get("version") != _SCHEMA_VERSION:
         return {}
     entries = raw.get("entries")
@@ -118,15 +115,18 @@ def _load(path: str) -> Dict[str, Dict]:
 
 
 def _save() -> None:
-    """Atomically persist the in-memory table (no-op without a dir)."""
+    """Atomically persist the in-memory table (no-op without a dir).
+
+    Goes through the shared atomic-IO core (:mod:`repro.store_io.atomic`)
+    but keeps the raw ``{"version", "entries"}`` file format — no
+    manifest envelope — so existing tables stay readable.
+    """
     path = _AUTOTUNE["dir"]
     if path is None:
         return
+    from repro.store_io.atomic import atomic_write_json
     payload = {"version": _SCHEMA_VERSION, "entries": _AUTOTUNE["table"]}
-    tmp = _table_path(path) + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
-    os.replace(tmp, _table_path(path))
+    atomic_write_json(_table_path(path), payload, indent=1, sort_keys=True)
 
 
 def enable_autotune(path: Optional[str] = None) -> Optional[str]:

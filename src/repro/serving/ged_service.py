@@ -99,18 +99,36 @@ class GedVerificationService:
 
     # ------------------------------------------------------------ public
 
-    def register_corpus(self, graphs, **store_options) -> GraphStore:
+    def register_corpus(self, graphs=None, *, store_dir: Optional[str]
+                        = None, **store_options) -> GraphStore:
         """Ingest a corpus; later batch verification against its members
         routes through the store's filter-verify pipeline.
 
-        The store shares this service's engine — and therefore its
-        result cache, compile cache and executor (mesh placement
-        included; the candidate index's pivot distances live in that
-        shared result cache) — so ``store_options`` may only carry
-        store-level knobs (``digest``, ``filter_iters``, ``filter_pool``,
-        ``vocab``, ``index``); engine-level options raise.  Returns the
-        store for direct ``range_search`` / ``top_k`` use.
+        ``store_dir=`` warm-starts instead of ingesting: the persisted
+        store (:meth:`repro.ged.GraphStore.save`) is reopened with its
+        own snapshot-recorded knobs — so ``store_options`` must stay
+        empty — and ``graphs`` becomes the optional rebuild fallback for
+        a corrupted snapshot.
+
+        Either way the store shares this service's engine — and
+        therefore its result cache, compile cache and executor (mesh
+        placement included; the candidate index's pivot distances live
+        in that shared result cache) — so ``store_options`` may only
+        carry store-level knobs (``digest``, ``filter_iters``,
+        ``filter_pool``, ``vocab``, ``index``); engine-level options
+        raise.  Returns the store for direct ``range_search`` /
+        ``top_k`` use.
         """
+        if store_dir is not None:
+            if store_options:
+                raise TypeError(
+                    f"store_dir= restores store options from the "
+                    f"snapshot; got {sorted(store_options)}")
+            self.store = GraphStore.open(store_dir, engine=self.engine,
+                                         graphs=graphs)
+            return self.store
+        if graphs is None:
+            raise TypeError("register_corpus needs graphs or store_dir=")
         # GedEngine slots are pinned for the serving batch shape; the
         # store's stage-1 buckets pack through the same engine config.
         self.store = GraphStore(graphs, engine=self.engine,
@@ -174,12 +192,31 @@ class GedSimilarityService:
         hits = svc.range_search(query, tau=4.0)
         answers = svc.search([SearchRequest(q1, tau=3.0),
                               SearchRequest(q2, k=10)])
+
+    ``store_dir=`` warm-starts serving from a persisted store
+    (:meth:`repro.ged.GraphStore.save`) instead of re-ingesting —
+    store-level knobs (``digest``, ``filter_iters``, ``index`` config)
+    come from the snapshot, remaining keyword options configure the
+    fresh engine, and ``graphs`` becomes the optional rebuild fallback
+    for a corrupted snapshot::
+
+        svc = GedSimilarityService(store_dir="/var/ged/corpus")
     """
 
-    def __init__(self, graphs, *, mesh=None, batch_size: int = 256,
-                 index="auto", **store_options):
-        self.store = GraphStore(graphs, mesh=mesh, batch_size=batch_size,
-                                index=index, **store_options)
+    def __init__(self, graphs=None, *, store_dir: Optional[str] = None,
+                 mesh=None, batch_size: int = 256, index="auto",
+                 **store_options):
+        if store_dir is not None:
+            self.store = GraphStore.open(
+                store_dir, mesh=mesh, batch_size=batch_size,
+                graphs=graphs, **store_options)
+        elif graphs is not None:
+            self.store = GraphStore(graphs, mesh=mesh,
+                                    batch_size=batch_size, index=index,
+                                    **store_options)
+        else:
+            raise TypeError(
+                "GedSimilarityService needs graphs or store_dir=")
 
     @property
     def stats(self) -> Dict[str, float]:

@@ -1,0 +1,32 @@
+"""``repro.store_io`` — the durable substrate under the serving tier.
+
+Three layers (bottom up):
+
+* :mod:`repro.store_io.atomic` — the shared atomic-IO core every
+  persistence path in the tree goes through: atomic-rename JSON,
+  schema-versioned checksummed manifests, checksummed mmap-loadable
+  ``.npy`` segments, and advisory file locks.  The autotune table
+  (``tuning.json``) writes through it too.
+* :mod:`repro.store_io.graphstore_io` — the on-disk layout and
+  (de)serialization behind :meth:`repro.ged.GraphStore.save` /
+  :meth:`~repro.ged.GraphStore.open`: generation directories, the
+  append/delete journal, and compaction.
+* :mod:`repro.store_io.shared_cache` — :class:`SharedResultCache`, the
+  file-locked cross-process LRU of certified GED scalars layered behind
+  the engine's in-memory result cache
+  (``GedEngine(shared_cache_dir=...)``).
+
+See ``docs/persistence.md`` for the full on-disk contract.
+"""
+
+from repro.store_io.atomic import (CorruptStoreError, SchemaVersionError,
+                                   StoreIOError)
+from repro.store_io.shared_cache import SHARED_CACHE_ENV, SharedResultCache
+
+__all__ = [
+    "StoreIOError",
+    "CorruptStoreError",
+    "SchemaVersionError",
+    "SharedResultCache",
+    "SHARED_CACHE_ENV",
+]
