@@ -554,10 +554,70 @@ def engine_store_persistence(quick=True) -> List[Dict]:
     return [row]
 
 
+def engine_deadline(quick=True) -> List[Dict]:
+    """Anytime bound quality vs wall-clock budget (``docs/robustness.md``).
+
+    Runs the ``auto`` pipeline over one fixed pair set at several
+    deadline budgets (warm — compiles are paid before the clock starts)
+    and reports, per budget: certified fraction, timed-out fraction,
+    measured overshoot, and the bound-quality curve ``lb_quality`` =
+    mean(lower_bound / true GED) with certified pairs counting 1.0 — the
+    number that should climb monotonically toward 1.0 as the budget
+    grows.  Soundness (``lb <= true GED <= ub``) is asserted at every
+    budget; overshoot must stay within 20% of budgets >= 0.25s.
+    """
+    gs = groups(quick, pairs_per_group=3)
+    pairs = _flat_pairs(gs, max_pairs=24 if quick else 48)
+    truth = [exact_ged(q, g, bound="BMa").ged for q, g in pairs]
+
+    def make() -> GedEngine:
+        eng = _engine(backend="auto", batch_size=8, max_in_flight=4)
+        # small first rung: forces escalation + a host tail, so budgets
+        # actually bite on paper-scale pairs
+        eng._backend.scheduler.rungs = ((8, 1, 4), (256, 4, 128))
+        return eng
+
+    make().compute(pairs)                              # compile warm-up
+    budgets = ([0.001, 0.005, 0.02, 0.25] if quick
+               else [0.001, 0.005, 0.02, 0.05, 0.25, 1.0])
+    rows = []
+    for budget in budgets + [None]:
+        eng = make()
+        outs, dt = timed(eng.compute, pairs, deadline_s=budget)
+        lbq = []
+        for o, t in zip(outs, truth):
+            if not o.certified:
+                assert o.lower_bound <= t + 1e-9, (budget, o.lower_bound, t)
+                assert o.upper_bound >= t - 1e-9, (budget, o.upper_bound, t)
+            lbq.append(1.0 if o.certified
+                       else min(o.lower_bound / t, 1.0) if t else 1.0)
+        overshoot = 0.0 if budget is None else max(dt - budget, 0.0) / budget
+        if budget is not None and budget >= 0.25:
+            assert overshoot <= 0.20, \
+                f"deadline overshoot {overshoot:.0%} at budget {budget}s"
+        rows.append({
+            "case": "no-deadline" if budget is None else f"{budget:g}s",
+            "budget_s": 0.0 if budget is None else budget,
+            "pairs": len(pairs),
+            "wall_s": dt,
+            "overshoot_frac": overshoot,
+            "certified_frac": float(np.mean([o.certified for o in outs])),
+            "timed_out_frac": float(np.mean([o.timed_out for o in outs])),
+            "lb_quality": float(np.mean(lbq)),
+        })
+    assert rows[-1]["certified_frac"] == 1.0, \
+        "no-deadline run must certify everything"
+    print_table("Anytime contract: bound quality vs deadline budget", rows,
+                ["case", "pairs", "wall_s", "overshoot_frac",
+                 "certified_frac", "timed_out_frac", "lb_quality"])
+    record_section("BENCH_engine", "deadline", rows)
+    return rows
+
+
 ALL = (engine_agreement_and_throughput, engine_verification,
        engine_bound_ablation, engine_sweeps_ablation,
        engine_backend_throughput, engine_escalation_overlap,
-       engine_similarity_search, kernel_validation)
+       engine_similarity_search, engine_deadline, kernel_validation)
 
 
 def scheduler_cost_model(quick=True) -> List[Dict]:

@@ -27,7 +27,8 @@ def main() -> None:
                          "steps pass it so intent reads in the workflow)")
     ap.add_argument("--only", default="",
                     help="comma list: eval1..eval9, engine, index, "
-                         "persistence, kernels, eval_kernels, roofline")
+                         "deadline, persistence, kernels, eval_kernels, "
+                         "roofline")
     args = ap.parse_args()
     if args.full and args.quick:
         ap.error("--full and --quick are mutually exclusive")
@@ -36,9 +37,11 @@ def main() -> None:
 
     # tags subsumed by a broader one in a default (no --only) run:
     # "engine" already runs the candidate-index sweep via
-    # engine_similarity_search, so "index" only fires when asked for
-    # (the CI index-smoke step runs `--only index`).
-    implied = {"index"}
+    # engine_similarity_search and the anytime-deadline curve via
+    # engine_deadline, so those tags only fire when asked for (the CI
+    # index-smoke and chaos-smoke steps run `--only index` / `--only
+    # deadline`).
+    implied = {"index", "deadline"}
 
     def want(tag: str) -> bool:
         return tag in only if only else tag not in implied
@@ -64,8 +67,10 @@ def main() -> None:
                    eval_engine.engine_backend_throughput,
                    eval_engine.engine_escalation_overlap,
                    eval_engine.engine_similarity_search,
+                   eval_engine.engine_deadline,
                    eval_engine.scheduler_cost_model),
         "index": (eval_engine.engine_candidate_index,),
+        "deadline": (eval_engine.engine_deadline,),
         # "persistence" is the CI smoke tag for the durable-store rail:
         # cold ingest vs save vs warm open vs journal append (fresh/warm
         # result parity asserted inside, timings informational)

@@ -55,6 +55,11 @@ class SearchResult:
     best_mapping: Optional[np.ndarray]
     upper_bound: float
     stats: SearchStats
+    # Anytime fields (appended with defaults so completed searches are
+    # unchanged): on deadline expiry the search stops cooperatively and
+    # reports the admissible floor over everything still open.
+    lower_bound: Optional[float] = None
+    timed_out: bool = False
 
 
 class _Entry:
@@ -88,6 +93,7 @@ def _search(
     tau: Optional[float] = None,
     expand_all: bool = True,
     order: Optional[np.ndarray] = None,
+    deadline=None,
 ) -> SearchResult:
     t0 = time.perf_counter()
     q, g, _swapped = pad_pair(q, g)
@@ -142,10 +148,28 @@ def _search(
     # -- root ---------------------------------------------------------------
     push(_Entry((), 0, 0.0, 0.0, [], None))
     accepted = False
+    timed_out = False
+    open_lb = 0.0               # admissible floor over open work at expiry
 
     while heap:
         key, _, entry = heapq.heappop(heap)
         stats.pops += 1
+        # Cooperative deadline check (anytime contract, docs/robustness.md):
+        # the first pop and then every 16 keeps the overhead unmeasurable
+        # on completed searches while bounding overshoot to a handful of
+        # expansions — and guarantees an already-expired deadline stops
+        # even a tiny search before real work.  ``deadline`` is duck-typed
+        # (anything with ``expired()``) so the core layer stays
+        # independent of repro.ged.
+        if deadline is not None and (stats.pops & 0xF) == 1 \
+                and deadline.expired():
+            timed_out = True
+            # Every not-yet-enumerated full mapping descends from an open
+            # entry (cost >= its lb) or from one pruned at lb >= the ub
+            # threshold, so this min is a sound global lower bound.
+            open_lb = min(min(e.lb for _, _, e in heap),
+                          entry.lb, ub) if heap else min(entry.lb, ub)
+            break
         if entry.lb >= ub:
             if strategy == "astar":
                 break  # everything left has lb >= this lb >= ub
@@ -241,6 +265,22 @@ def _search(
         push(child)
 
     stats.wall_time_s = time.perf_counter() - t0
+    if timed_out:
+        # Best-so-far result: a real incumbent (if any) is the upper
+        # bound; in verification mode the initial ``tau + 0.5`` is only a
+        # pruning threshold, not a mapping, so without an incumbent the
+        # true upper bound is unknown.
+        true_ub = ub if best_map is not None else _INF
+        if verification:
+            similar: Optional[bool] = None
+            if open_lb > tau:
+                similar = False     # all remaining possibilities exceed tau
+            elif true_ub <= tau:
+                similar = True      # an incumbent at or below tau exists
+            return SearchResult(None, similar, best_map, true_ub, stats,
+                                lower_bound=float(open_lb), timed_out=True)
+        return SearchResult(None, None, best_map, true_ub, stats,
+                            lower_bound=float(open_lb), timed_out=True)
     if verification:
         similar = accepted or (ub <= tau)
         return SearchResult(None, bool(similar), best_map, ub, stats)
@@ -255,10 +295,11 @@ def ged(
     strategy: str = "astar",
     expand_all: bool = True,
     order: Optional[np.ndarray] = None,
+    deadline=None,
 ) -> SearchResult:
     """GED computation: ``delta(q, g)`` with the chosen bound/strategy."""
     return _search(q, g, bound=bound, strategy=strategy, tau=None,
-                   expand_all=expand_all, order=order)
+                   expand_all=expand_all, order=order, deadline=deadline)
 
 
 def ged_verify(
@@ -269,7 +310,8 @@ def ged_verify(
     strategy: str = "astar",
     expand_all: bool = True,
     order: Optional[np.ndarray] = None,
+    deadline=None,
 ) -> SearchResult:
     """GED verification: is ``delta(q, g) <= tau``? (§5.3)."""
     return _search(q, g, bound=bound, strategy=strategy, tau=float(tau),
-                   expand_all=expand_all, order=order)
+                   expand_all=expand_all, order=order, deadline=deadline)

@@ -22,6 +22,13 @@ overlapped ``auto`` escalation scheduler rides; and an engine-level
 :class:`ResultCache` answers duplicate pairs without re-execution (keyed
 on exact or Weisfeiler-Leman canonical digests — see :func:`wl_digest`).
 
+Robustness primitives live in :mod:`repro.ged.faults`: the anytime
+:class:`Deadline` contract (``GedEngine(deadline_s=...)`` — every pair
+answers with admissible best-so-far bounds when the budget expires), the
+:class:`RetryPolicy`/degradation ladder under faults, and the
+deterministic :class:`FaultInjector` chaos hook — see
+``docs/robustness.md``.
+
 The layers underneath (``repro.core.exact``, ``repro.core.engine``,
 ``repro.serving``) remain importable, but new code — and all future
 sharding/caching/async work — should come through this door.
@@ -38,6 +45,8 @@ from repro.ged.backends import (available_backends, make_backend,
 from repro.ged.exec import (Executor, PendingBatch, ResultCache,
                             ShardedExecutor, SketchSpec, batch_signatures,
                             graph_digest, wl_digest, wl_signature)
+from repro.ged.faults import (Deadline, FaultInjector, InjectedFault,
+                              Overloaded, RetryPolicy)
 from repro.ged.index import CandidateIndex, sketch_damage
 from repro.ged.plan import as_graph, build_plan, slot_bucket
 from repro.ged.results import GedOutcome, SearchHit
@@ -67,4 +76,9 @@ __all__ = [
     "ResultCache",
     "graph_digest",
     "wl_digest",
+    "Deadline",
+    "RetryPolicy",
+    "FaultInjector",
+    "InjectedFault",
+    "Overloaded",
 ]

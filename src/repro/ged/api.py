@@ -36,6 +36,8 @@ from repro.ged.backends import Backend, make_backend
 from repro.ged.exec import (DIGESTS, ResultCache, detached,
                             enable_compile_cache, pair_key,
                             pair_key_from_digests, persistent_cache_stats)
+from repro.ged.faults import (Deadline, FaultInjector, RetryPolicy,
+                              RunContext)
 from repro.ged.plan import Vocab, as_graph, as_pairs, build_plan
 from repro.ged.results import GedOutcome
 
@@ -114,6 +116,24 @@ class GedEngine:
         win soundly instead — WL dedup confirmed by certified
         zero-distance checks at ingest — and keeps its engine on
         ``"exact"``.
+    deadline_s : wall-clock budget per ``compute``/``verify``/``flush``
+        call (default ``None`` = unbounded, bit-identical to an engine
+        without the robustness layer).  On expiry, in-flight device work
+        drains, remaining rungs are skipped, and *every* pair still
+        returns a :class:`GedOutcome` carrying best-so-far admissible
+        ``lower_bound``/``upper_bound`` with ``certified=False`` and
+        ``timed_out`` set — never an exception, never a missing result.
+        Each entry point takes a per-call override.  See
+        ``docs/robustness.md``.
+    per_pair_deadline_s : additional per-pair budget for host-solver
+        searches (cooperative check inside the search loop), capped by
+        whatever remains of ``deadline_s``.
+    fault_inject : deterministic fault spec (string for
+        :class:`repro.ged.faults.FaultInjector`, or an injector
+        instance) scoped to this engine; the ``REPRO_GED_FAULT_INJECT``
+        environment variable injects process-wide instead.
+    retry : :class:`repro.ged.faults.RetryPolicy` for transient dispatch
+        failures (default: 2 retries, exponential backoff + jitter).
     Remaining keyword arguments (``pool``, ``expand``, ``max_iters``,
     ``sweeps``, ``bound``, ``strategy``, ``use_kernel``) override
     :class:`EngineConfig` defaults.  ``use_kernel`` is implied by the
@@ -134,6 +154,25 @@ class GedEngine:
     [1.0]
     >>> [o.similar for o in eng.verify([(q, g)], tau=1.0)]
     [True]
+
+    The anytime deadline contract — an exhausted budget still answers
+    every pair, with sound (here: cheap stage-0-style) bounds:
+
+    >>> eng = ged.GedEngine("exact", deadline_s=0.0)    # expires on arrival
+    >>> out, = eng.compute([(q, g)])
+    >>> out.timed_out, out.certified, out.lower_bound, out.upper_bound
+    (True, False, 1.0, inf)
+    >>> out, = eng.compute([(q, g)], deadline_s=60.0)   # per-call override
+    >>> out.ged, out.certified
+    (1.0, True)
+
+    Deterministic fault injection — an injected host-solver failure
+    degrades (uncertified, admissible bounds), never errors:
+
+    >>> eng = ged.GedEngine("exact", fault_inject="host@times=1")
+    >>> out, = eng.compute([(q, g)])
+    >>> out.degraded, out.certified, out.lower_bound <= 1.0
+    (True, False, True)
     """
 
     def __init__(self, backend: str = "auto", *,
@@ -149,11 +188,22 @@ class GedEngine:
                  compile_cache_dir: Optional[str] = None,
                  autotune_dir: Optional[str] = None,
                  digest: str = "exact",
+                 deadline_s: Optional[float] = None,
+                 per_pair_deadline_s: Optional[float] = None,
+                 fault_inject: Union[None, str, FaultInjector] = None,
+                 retry: Optional[RetryPolicy] = None,
                  config: Optional[EngineConfig] = None,
                  **config_overrides):
         unknown = set(config_overrides) - _CONFIG_FIELDS
         if unknown:
             raise TypeError(f"unknown GedEngine options: {sorted(unknown)}")
+        self.deadline_s = deadline_s
+        self.per_pair_deadline_s = per_pair_deadline_s
+        self._injector = (FaultInjector(fault_inject)
+                          if isinstance(fault_inject, str)
+                          else fault_inject)
+        self._retry = retry if retry is not None else RetryPolicy()
+        self._fault_stats: Dict[str, float] = {}
         if digest not in DIGESTS:
             raise ValueError(f"unknown digest {digest!r}; "
                              f"expected one of {sorted(DIGESTS)}")
@@ -200,18 +250,31 @@ class GedEngine:
                 config = dataclasses.replace(config,
                                              use_kernel=self._kernel_default)
         self.config = config
+        # backends registered before the robustness layer may not take
+        # ``ctx``; only pass it when the run() signature names it
+        import inspect
+        try:
+            self._backend_takes_ctx = "ctx" in inspect.signature(
+                self._backend.run).parameters
+        except (TypeError, ValueError):            # pragma: no cover
+            self._backend_takes_ctx = False
         self._pending: List[Tuple[object, object, Optional[float]]] = []
 
     # ------------------------------------------------------------ batch
 
     def compute(self, pairs, vocab: Optional[Vocab] = None,
+                deadline_s: Union[None, float, Deadline] = None,
+                per_pair_deadline_s: Optional[float] = None,
                 **config_overrides) -> List[GedOutcome]:
         """Exact-with-certificate GED for every pair.
 
         ``vocab`` overrides the engine's label universe for this call
         only (callers with a known corpus vocabulary — e.g.
         :class:`repro.ged.GraphStore` — keep compile keys stable without
-        mutating shared engine state).
+        mutating shared engine state).  ``deadline_s`` /
+        ``per_pair_deadline_s`` override the engine-level budgets for
+        this call (anytime contract: an expired budget yields
+        uncertified best-so-far bounds, never an exception).
 
         >>> from repro import ged
         >>> outs = ged.GedEngine("exact").compute(
@@ -220,15 +283,20 @@ class GedEngine:
         (0.0, True)
         """
         return self._run(pairs, None, verification=False,
-                         overrides=config_overrides, vocab=vocab)
+                         overrides=config_overrides, vocab=vocab,
+                         deadline_s=deadline_s,
+                         per_pair_deadline_s=per_pair_deadline_s)
 
     def verify(self, pairs, tau: Taus, vocab: Optional[Vocab] = None,
+               deadline_s: Union[None, float, Deadline] = None,
+               per_pair_deadline_s: Optional[float] = None,
                **config_overrides) -> List[GedOutcome]:
         """Certified ``delta(q, g) <= tau``? for every pair.
 
         ``tau`` is a scalar (broadcast) or one threshold per pair;
         ``vocab`` is a per-call label-universe override (see
-        :meth:`compute`).
+        :meth:`compute`); ``deadline_s`` / ``per_pair_deadline_s`` are
+        the per-call anytime budgets (see :meth:`compute`).
 
         >>> from repro import ged
         >>> pair = (([0], []), ([1], []))           # distance 1
@@ -237,7 +305,9 @@ class GedEngine:
         [False, True]
         """
         return self._run(pairs, tau, verification=True,
-                         overrides=config_overrides, vocab=vocab)
+                         overrides=config_overrides, vocab=vocab,
+                         deadline_s=deadline_s,
+                         per_pair_deadline_s=per_pair_deadline_s)
 
     # -------------------------------------------------------- streaming
 
@@ -258,28 +328,40 @@ class GedEngine:
         self._pending.append((q, g, None if tau is None else float(tau)))
         return len(self._pending) - 1
 
-    def flush(self) -> List[GedOutcome]:
+    def flush(self, deadline_s: Union[None, float, Deadline] = None,
+              per_pair_deadline_s: Optional[float] = None
+              ) -> List[GedOutcome]:
         """Answer every submitted pair, in submission order.
 
         Mixed computation/verification submissions come back as one list
         aligned with the tickets :meth:`submit` returned (see the example
-        there); a drained engine flushes to ``[]``.
+        there); a drained engine flushes to ``[]``.  ``deadline_s`` is
+        one shared budget for the whole flush (the computation and
+        verification sub-batches draw from the same clock).
         """
         pending, self._pending = self._pending, []
         if not pending:
             return []
+        dl = deadline_s if deadline_s is not None else self.deadline_s
+        # one Deadline for both sub-batches, so a flush-level budget is a
+        # single clock, not one-per-mode
+        shared = dl if isinstance(dl, Deadline) or dl is None \
+            else Deadline(dl)
         results: List[Optional[GedOutcome]] = [None] * len(pending)
         comp = [i for i, (_, _, tau) in enumerate(pending) if tau is None]
         veri = [i for i, (_, _, tau) in enumerate(pending) if tau is not None]
         if comp:
             outs = self.compute([(pending[i][0], pending[i][1])
-                                 for i in comp])
+                                 for i in comp], deadline_s=shared,
+                                per_pair_deadline_s=per_pair_deadline_s)
             for i, o in zip(comp, outs):
                 results[i] = o
         if veri:
             outs = self.verify([(pending[i][0], pending[i][1])
                                 for i in veri],
-                               [pending[i][2] for i in veri])
+                               [pending[i][2] for i in veri],
+                               deadline_s=shared,
+                               per_pair_deadline_s=per_pair_deadline_s)
             for i, o in zip(veri, outs):
                 results[i] = o
         return results  # type: ignore[return-value]
@@ -310,7 +392,11 @@ class GedEngine:
         ``autotune_hits`` / ``autotune_misses`` / ``autotune_sweep_s`` /
         ``autotune_entries`` and ``pallas_interpret`` (True when Pallas
         kernels fall back to interpret mode — CPU — so bench rows cannot
-        masquerade as accelerator numbers).
+        masquerade as accelerator numbers).  Robustness counters
+        (``retries``, ``degraded_kernel``, ``degraded_host``,
+        ``fault_*``, ``timed_out_pairs``,
+        ``shared_cache_lock_timeouts``) appear once the corresponding
+        event has happened — see ``docs/robustness.md``.
 
         >>> from repro import ged
         >>> eng = ged.GedEngine("exact")
@@ -338,6 +424,10 @@ class GedEngine:
             out["shared_cache_misses"] = self._shared.misses
             out["shared_cache_evictions"] = self._shared.evictions
             out["shared_cache_entries"] = self._shared.entries()
+            out["shared_cache_lock_timeouts"] = self._shared.lock_timeouts
+        # robustness counters accumulated across runs (retries, degraded_*,
+        # fault_*, timed_out_pairs) — absent keys mean nothing happened
+        out.update(self._fault_stats)
         out.update(persistent_cache_stats())
         out.update(autotune_stats())
         return out
@@ -390,7 +480,10 @@ class GedEngine:
 
     def _run(self, pairs, tau: Optional[Taus], verification: bool,
              overrides: dict,
-             vocab: Optional[Vocab] = None) -> List[GedOutcome]:
+             vocab: Optional[Vocab] = None,
+             deadline_s: Union[None, float, Deadline] = None,
+             per_pair_deadline_s: Optional[float] = None
+             ) -> List[GedOutcome]:
         unknown = set(overrides) - _CONFIG_FIELDS
         if unknown:
             raise TypeError(f"unknown engine options: {sorted(unknown)}")
@@ -447,9 +540,30 @@ class GedEngine:
                 [pairs[i] for i in run_idx], slots=self.slots,
                 vocab=vocab if vocab is not None else self.vocab,
                 batch_multiple=self.batch_multiple)
-            outs = self._backend.run(plan, taus[run_idx], verification, cfg)
+            dl = deadline_s if deadline_s is not None else self.deadline_s
+            pp = (per_pair_deadline_s if per_pair_deadline_s is not None
+                  else self.per_pair_deadline_s)
+            ctx = RunContext(
+                deadline=dl if isinstance(dl, Deadline) else Deadline(dl),
+                per_pair_deadline_s=pp,
+                injector=self._injector, retry=self._retry)
+            if self._backend_takes_ctx:
+                outs = self._backend.run(plan, taus[run_idx], verification,
+                                         cfg, ctx=ctx)
+            else:
+                outs = self._backend.run(plan, taus[run_idx], verification,
+                                         cfg)
+            for k, v in ctx.stats.items():
+                self._fault_stats[k] = self._fault_stats.get(k, 0) + v
             for i, o in zip(run_idx, outs):
                 results[i] = o
+                # never cache a timed-out or fault-degraded *uncertified*
+                # answer: a later, unconstrained run must not be poisoned
+                # by this run's budget or faults (degraded-but-certified
+                # answers are bit-identical, so they stay cacheable)
+                if o.timed_out or (not o.certified
+                                   and o.stats.get("degraded")):
+                    continue
                 if self._cache is not None:
                     self._cache.put(keys[i], self._cache_view(o))
                 if self._shared is not None:

@@ -72,7 +72,14 @@ class Backend(Protocol):
     def run(self, plan: Plan, taus: np.ndarray, verification: bool,
             cfg: EngineConfig) -> List[GedOutcome]:
         """Answer every pair in ``plan`` (in order).  ``taus`` is aligned
-        with ``plan.pairs`` (zeros in computation mode)."""
+        with ``plan.pairs`` (zeros in computation mode).
+
+        A backend may additionally accept ``ctx`` (keyword,
+        :class:`repro.ged.faults.RunContext`) to honor deadlines and the
+        fault-injection/retry machinery; the facade only passes it when
+        the signature names it, so third-party backends registered before
+        the robustness layer keep working unchanged.
+        """
         ...
 
 
@@ -96,20 +103,20 @@ class ExactBackend:
     batch_multiple = 1     # host solver: no device batch shape to satisfy
 
     def run(self, plan: Plan, taus: np.ndarray, verification: bool,
-            cfg: EngineConfig) -> List[GedOutcome]:
+            cfg: EngineConfig, ctx=None) -> List[GedOutcome]:
+        from repro.ged import faults as _faults
         outcomes: List[GedOutcome] = []
         for i, (q, g) in enumerate(plan.pairs):
-            t0 = time.perf_counter()
-            if verification:
-                res = ged_verify(q, g, float(taus[i]), bound="BMa",
-                                 strategy=cfg.strategy)
-                outcomes.append(_host_verify_outcome(
-                    res, float(taus[i]), self.name,
-                    time.perf_counter() - t0))
-            else:
-                res = exact_ged(q, g, bound="BMa", strategy=cfg.strategy)
-                outcomes.append(_host_compute_outcome(
-                    res, self.name, time.perf_counter() - t0))
+            tau = float(taus[i]) if verification else None
+            if ctx is not None and ctx.expired():
+                # budget already spent: cheap admissible floor, no search
+                ctx.bump("timed_out_pairs")
+                outcomes.append(_faults.fallback_outcome(
+                    q, g, verification, tau, self.name,
+                    stats={"rung": 0}))
+                continue
+            outcomes.append(_robust_host_solve(
+                q, g, tau, verification, cfg, self.name, 0, ctx))
         return outcomes
 
 
@@ -133,6 +140,63 @@ def _host_verify_outcome(res, tau: float, backend: str, wall_s: float,
         mapping=res.best_mapping if similar else None,
         backend=backend, wall_s=wall_s, tau=tau,
         stats={"rung": rung, "expanded": res.stats.expanded})
+
+
+def _robust_host_solve(q, g, tau: Optional[float], verification: bool,
+                       cfg: EngineConfig, backend: str, rung: int,
+                       ctx=None) -> GedOutcome:
+    """One host-solver pair under the robustness context.
+
+    ``ctx=None`` is exactly the legacy certified path.  With a context:
+    the pair runs under :meth:`RunContext.pair_deadline` (cooperative
+    check inside the search loop); a timed-out search becomes a sound
+    uncertified best-so-far outcome; the ``host`` fault-injection site
+    simulates a solver failure, which — since the host solver is the
+    ladder's last step — degrades to the cheap admissible floor.
+    """
+    from repro.ged import faults as _faults
+
+    t0 = time.perf_counter()
+    inj = _faults.get_injector(ctx)
+    if inj is not None:
+        try:
+            inj.check("host", rung)
+        except Exception:
+            if ctx is not None:
+                ctx.bump("fault_host")
+            _faults.warn_once(
+                "host-fault",
+                "host solver failed (injected or real); answering from "
+                "the cheap admissible floor, uncertified")
+            out = _faults.fallback_outcome(
+                q, g, verification, tau, backend, timed_out=False,
+                stats={"rung": rung, "degraded": True})
+            out.wall_s = time.perf_counter() - t0
+            return out
+    deadline = None
+    if ctx is not None and (ctx.has_deadline
+                            or ctx.per_pair_deadline_s is not None):
+        deadline = ctx.pair_deadline()
+    if verification:
+        res = ged_verify(q, g, float(tau), bound="BMa",
+                         strategy=cfg.strategy, deadline=deadline)
+    else:
+        res = exact_ged(q, g, bound="BMa", strategy=cfg.strategy,
+                        deadline=deadline)
+    wall = time.perf_counter() - t0
+    if getattr(res, "timed_out", False):
+        if ctx is not None:
+            ctx.bump("timed_out_pairs")
+        out = _faults.fallback_outcome(
+            q, g, verification, tau, backend,
+            lower_bound=res.lower_bound, upper_bound=res.upper_bound,
+            stats={"rung": rung, "expanded": res.stats.expanded})
+        out.wall_s = wall
+        return out
+    if verification:
+        return _host_verify_outcome(res, float(tau), backend, wall,
+                                    rung=rung)
+    return _host_compute_outcome(res, backend, wall, rung=rung)
 
 
 # --------------------------------------------------------- batched engine
@@ -166,17 +230,54 @@ class EngineBackend:
         return self.executor.batch_multiple
 
     def run(self, plan: Plan, taus: np.ndarray, verification: bool,
-            cfg: EngineConfig) -> List[GedOutcome]:
+            cfg: EngineConfig, ctx=None) -> List[GedOutcome]:
+        from repro.ged import faults as _faults
         results: List[Optional[GedOutcome]] = [None] * len(plan.pairs)
         for bucket in plan.buckets:
             t0 = time.perf_counter()
-            out = self.executor.run_bucket(bucket, taus, cfg, verification)
+            if ctx is not None and ctx.expired():
+                # deadline gone: remaining buckets answer from the cheap
+                # admissible floor (bucket granularity — one dispatch is
+                # the engine's unit of work)
+                for gi in bucket.indices:
+                    ctx.bump("timed_out_pairs")
+                    q, g = plan.pairs[gi]
+                    results[gi] = _faults.fallback_outcome(
+                        q, g, verification,
+                        float(taus[gi]) if verification else None,
+                        self.name, stats={"rung": 0})
+                continue
+            try:
+                pending = self.executor.run_bucket_async(
+                    bucket, taus, cfg, verification, ctx=ctx, rung=0)
+                out = pending.result()
+            except Exception as exc:
+                # the engine rung is permanently gone for this bucket
+                # (kernel AND unfused dispatch failed): the degradation
+                # ladder's last step is the certified host solver
+                _faults.warn_once(
+                    f"degrade-host-{self.name}",
+                    f"{self.name} backend: engine bucket failed "
+                    f"({exc!r}); degrading its pairs to the host solver")
+                for gi in bucket.indices:
+                    if ctx is not None:
+                        ctx.bump("degraded_host")
+                    q, g = plan.pairs[gi]
+                    o = _robust_host_solve(
+                        q, g, float(taus[gi]) if verification else None,
+                        verification, cfg, self.name, 0, ctx)
+                    o.stats["degraded"] = True
+                    results[gi] = o
+                continue
             wall = time.perf_counter() - t0
             for bi, gi in enumerate(bucket.indices):
-                results[gi] = engine_outcome(
+                o = engine_outcome(
                     out, bucket.packed, bi, verification,
                     float(taus[gi]) if verification else None,
                     self.name, wall, rung=0)
+                if pending.flags:
+                    o.stats.update(pending.flags)
+                results[gi] = o
         return results  # type: ignore[return-value]
 
 
@@ -284,7 +385,8 @@ class AutoBackend:
         return self.executor.batch_multiple
 
     def run(self, plan: Plan, taus: np.ndarray, verification: bool,
-            cfg: EngineConfig) -> List[GedOutcome]:
+            cfg: EngineConfig, ctx=None) -> List[GedOutcome]:
+        from repro.ged import faults as _faults
         results: List[Optional[GedOutcome]] = [None] * len(plan.pairs)
         diffs = [difficulty(q.n, g.n, q.m, g.m, q.vlabels, g.vlabels,
                             tau=float(taus[i]) if verification else None)
@@ -295,23 +397,55 @@ class AutoBackend:
         dispatchable: "collections.deque" = collections.deque()  # (bucket, rung)
         inflight: "collections.deque[_InFlight]" = collections.deque()
         last_block_end: Optional[float] = None  # end of last blocking drain
+        has_deadline = ctx is not None and ctx.has_deadline
+        # Best-so-far admissible bounds per surviving pair, merged across
+        # rungs (anytime contract) — maintained only under a deadline so
+        # the no-deadline path does zero extra work.
+        best: Dict[int, tuple] = {}
+        degraded: set = set()               # pairs routed around a fault
+
+        def merge_best(gi: int, lb: float, ub: float) -> None:
+            plb, pub = best.get(gi, (0.0, float("inf")))
+            best[gi] = (max(plb, lb), min(pub, ub))
 
         def solve_host(gi: int) -> None:
             # final rung: exact host solver (paper-faithful AStar+-BMa)
             q, g = plan.pairs[gi]
             self.stats["host_solved"] += 1
-            t0 = time.perf_counter()
-            if verification:
-                res = ged_verify(q, g, float(taus[gi]), bound="BMa",
-                                 strategy=cfg.strategy)
-                results[gi] = _host_verify_outcome(
-                    res, float(taus[gi]), f"{self.name}/exact",
-                    time.perf_counter() - t0, rung=-1)
-            else:
-                res = exact_ged(q, g, bound="BMa", strategy=cfg.strategy)
-                results[gi] = _host_compute_outcome(
-                    res, f"{self.name}/exact",
-                    time.perf_counter() - t0, rung=-1)
+            o = _robust_host_solve(
+                q, g, float(taus[gi]) if verification else None,
+                verification, cfg, f"{self.name}/exact", -1, ctx)
+            if gi in degraded:
+                o.stats["degraded"] = True
+            if not o.certified and gi in best:
+                # fold the engine rungs' best-so-far bounds into an
+                # uncertified answer (both sides admissible -> still sound)
+                lb, ub = best[gi]
+                o.lower_bound = max(o.lower_bound, lb)
+                o.upper_bound = min(o.upper_bound, ub)
+                o.lower_bound = min(o.lower_bound, o.upper_bound)
+                if verification and o.similar is None:
+                    if o.lower_bound > float(taus[gi]):
+                        o.similar = False
+                    elif o.upper_bound <= float(taus[gi]):
+                        o.similar = True
+            results[gi] = o
+
+        def degrade_bucket(bucket: Bucket, exc: Exception) -> None:
+            # the engine rung is gone for these pairs (kernel AND unfused
+            # dispatch failed): route them to the ladder's last step, the
+            # host solver, instead of failing the whole run
+            fresh = [gi for gi in bucket.indices if results[gi] is None]
+            degraded.update(fresh)
+            host_queue.extend(fresh)
+            self.stats["degraded_host"] = \
+                self.stats.get("degraded_host", 0) + len(fresh)
+            if ctx is not None:
+                ctx.bump("degraded_host", len(fresh))
+            _faults.warn_once(
+                "degrade-host-auto",
+                f"auto backend: engine rung failed ({exc!r}); routing "
+                f"{len(fresh)} pairs to the host solver")
 
         def refill() -> None:
             # turn scheduler batches into dispatchable rung buckets:
@@ -333,9 +467,13 @@ class AutoBackend:
             rcfg = dataclasses.replace(cfg, pool=pool, expand=expand,
                                        max_iters=max_iters)
             self.stats["dispatches"] += 1
-            pending = self.executor.run_packed_async(
-                bucket.packed, bucket.pad_values(taus), rcfg,
-                verification, real=bucket.real)
+            try:
+                pending = self.executor.run_packed_async(
+                    bucket.packed, bucket.pad_values(taus), rcfg,
+                    verification, real=bucket.real, ctx=ctx, rung=rung)
+            except Exception as exc:
+                degrade_bucket(bucket, exc)
+                return
             item = _InFlight(bucket, rung, pending, time.perf_counter())
             if self.overlap:
                 inflight.append(item)
@@ -343,9 +481,17 @@ class AutoBackend:
                 drain(item)             # sequential baseline: block now
 
         def drain(item: _InFlight) -> None:
+            # Never raises: a batch that fails at materialisation is
+            # degraded to the host solver, so callers (including the
+            # cleanup path below) can always drain in-flight work.
             nonlocal last_block_end
             t_drain = time.perf_counter()
-            out = item.pending.result()     # blocks until the batch lands
+            try:
+                out = item.pending.result()  # blocks until the batch lands
+            except Exception as exc:
+                last_block_end = time.perf_counter()
+                degrade_bucket(item.bucket, exc)
+                return
             now = time.perf_counter()
             # per-batch wall, not cumulative-since-run-start: a pair's
             # reported wall_s is the cost of the batch that answered it.
@@ -361,12 +507,22 @@ class AutoBackend:
             survivors = []
             for bi, gi in enumerate(item.bucket.indices):
                 if bool(out["exact"][bi]):
-                    results[gi] = engine_outcome(
+                    o = engine_outcome(
                         out, item.bucket.packed, bi, verification,
                         float(taus[gi]) if verification else None,
                         self.name, wall, rung=item.rung)
+                    if item.pending.flags:
+                        o.stats.update(item.pending.flags)
+                    results[gi] = o
                 else:
                     survivors.append(bi)
+                    if has_deadline:
+                        # pool floor is admissible; the compute-mode raw
+                        # ged is the engine's incumbent full mapping
+                        merge_best(
+                            gi, float(out["lower_bound"][bi]),
+                            float("inf") if verification
+                            else float(out["ged"][bi]))
             skey = f"survivors_rung_{item.rung}"
             self.stats[skey] = self.stats.get(skey, 0) + len(survivors)
             if survivors:
@@ -377,19 +533,51 @@ class AutoBackend:
                 if nxt is not None:
                     queue.append(nxt)
 
-        while queue or dispatchable or inflight or host_queue:
-            refill()
-            # keep the device fed: dispatch while there is work and room
-            while dispatchable and len(inflight) < self.max_in_flight:
-                dispatch(*dispatchable.popleft())
+        expired = False
+        try:
+            while queue or dispatchable or inflight or host_queue:
+                if ctx is not None and ctx.expired():
+                    expired = True
+                    break
                 refill()
-            if inflight:
-                # overlap: host-solve while the oldest batch is in flight
-                while host_queue and not inflight[0].pending.ready():
+                # keep the device fed: dispatch while there's work & room
+                while dispatchable and len(inflight) < self.max_in_flight:
+                    dispatch(*dispatchable.popleft())
+                    refill()
+                if inflight:
+                    # overlap: host-solve while oldest batch is in flight
+                    while host_queue and not inflight[0].pending.ready():
+                        if ctx is not None and ctx.expired():
+                            break
+                        solve_host(host_queue.pop(0))
+                    drain(inflight.popleft())
+                elif host_queue:
                     solve_host(host_queue.pop(0))
+        finally:
+            # Never strand dispatched device work or lose its survivor
+            # bounds — on deadline expiry or a mid-flight error, drain
+            # everything still in flight (drain() itself cannot raise).
+            while inflight:
                 drain(inflight.popleft())
-            elif host_queue:
-                solve_host(host_queue.pop(0))
+        if expired or any(r is None for r in results):
+            # Anytime tail: every pair the budget never reached answers
+            # with its best-so-far admissible bounds, uncertified.
+            for gi, r in enumerate(results):
+                if r is not None:
+                    continue
+                q, g = plan.pairs[gi]
+                lb, ub = best.get(gi, (0.0, float("inf")))
+                o = _faults.fallback_outcome(
+                    q, g, verification,
+                    float(taus[gi]) if verification else None,
+                    self.name, lower_bound=lb, upper_bound=ub)
+                if gi in degraded:
+                    o.stats["degraded"] = True
+                results[gi] = o
+                self.stats["timed_out_pairs"] = \
+                    self.stats.get("timed_out_pairs", 0) + 1
+                if ctx is not None:
+                    ctx.bump("timed_out_pairs")
         return results  # type: ignore[return-value]
 
 

@@ -148,11 +148,24 @@ class PendingBatch:
     True
     >>> p.result()["ged"]
     array([0., 0.])
+
+    ``recover`` (optional) is the executor's degraded re-dispatch: JAX
+    surfaces some runtime failures only at materialisation, so
+    :meth:`result` catches them, runs ``recover()`` synchronously (the
+    bit-identical unfused path) and marks ``flags["degraded"]``.
+    ``check`` is the deterministic fault-injection hook for that same
+    window (the ``result`` site).  ``flags`` records what the robust
+    dispatch path did (``retries`` / ``degraded``) so backends can fold
+    it into outcome stats.
     """
 
-    def __init__(self, arrays):
+    def __init__(self, arrays, recover=None, check=None,
+                 flags: Optional[Dict[str, float]] = None):
         self._arrays = arrays
         self._result: Optional[Dict[str, np.ndarray]] = None
+        self._recover = recover
+        self._check = check
+        self.flags: Dict[str, float] = {} if flags is None else flags
 
     def ready(self) -> bool:
         """True when every output has landed (never blocks)."""
@@ -165,10 +178,24 @@ class PendingBatch:
         return True
 
     def result(self) -> Dict[str, np.ndarray]:
-        """Block until the batch lands; numpy result dict (cached)."""
+        """Block until the batch lands; numpy result dict (cached).
+
+        A materialisation failure with a ``recover`` path re-runs the
+        batch on the degraded config instead of raising; without one the
+        failure propagates to the backend (which host-solves the pairs).
+        """
         if self._result is None:
-            self._result = {k: np.asarray(v)
-                            for k, v in self._arrays.items()}
+            try:
+                if self._check is not None:
+                    self._check()
+                self._result = {k: np.asarray(v)
+                                for k, v in self._arrays.items()}
+            except Exception:
+                if self._recover is None:
+                    raise
+                self.flags["degraded"] = True
+                self._result = {k: np.asarray(v)
+                                for k, v in self._recover().items()}
             self._arrays = None
         return self._result
 
@@ -213,14 +240,20 @@ class Executor:
 
     def run_packed_async(self, packed, taus: np.ndarray, cfg: EngineConfig,
                          verification: bool,
-                         real: Optional[int] = None) -> PendingBatch:
+                         real: Optional[int] = None,
+                         ctx=None, rung: Optional[int] = None
+                         ) -> PendingBatch:
         """Dispatch one engine invocation without waiting for the result.
 
         Returns a :class:`PendingBatch` immediately — JAX queues the device
         work and hands back array futures — so callers can dispatch rung
         *k+1* or solve host pairs while rung *k* is in flight.  ``real`` —
         pairs before batch padding, for the ``pairs`` counter (defaults to
-        the padded batch when the caller doesn't know).
+        the padded batch when the caller doesn't know).  ``ctx`` — the
+        engine's :class:`repro.ged.faults.RunContext` (retry policy, fault
+        injector, counters); ``rung`` labels the dispatch for rung-scoped
+        fault specs.  Both default to off, which is the bit-identical
+        legacy path.
 
         Example (the overlapped ``auto`` scheduler's inner loop)::
 
@@ -240,11 +273,93 @@ class Executor:
         self.cache.record(packed, cfg, verification)
         self.stats["calls"] += 1
         self.stats["pairs"] += packed.batch if real is None else int(real)
-        return PendingBatch(self._dispatch(packed, taus, cfg, verification))
+        return self._robust_dispatch(packed, taus, cfg, verification,
+                                     ctx, rung)
+
+    def _robust_dispatch(self, packed, taus, cfg, verification, ctx,
+                         rung) -> PendingBatch:
+        """Dispatch with the retry policy and kernel-degradation ladder.
+
+        Transient failures retry with exponential backoff + jitter
+        (:class:`repro.ged.faults.RetryPolicy`); permanent kernel
+        compile/runtime failures fall back to the bit-identical unfused
+        config (``use_kernel=False``); a failure of the unfused path too
+        propagates, and the backend above degrades the bucket to the host
+        solver.  On a clean dispatch this is exactly the legacy path —
+        the try/except costs nothing unless something raises.
+        """
+        import time as _time
+
+        from repro.ged import faults as _faults
+
+        inj = _faults.get_injector(ctx)
+        retry = ctx.retry if ctx is not None else _faults.RetryPolicy()
+
+        def bump(key: str, by: float = 1) -> None:
+            self.stats[key] = self.stats.get(key, 0) + by
+            if ctx is not None:
+                ctx.bump(key, by)
+
+        ladder = [cfg]
+        if bool(cfg.use_kernel):
+            ladder.append(dataclasses.replace(cfg, use_kernel=False,
+                                              dispatch=None))
+        flags: Dict[str, float] = {}
+        last_exc: Optional[Exception] = None
+        for step, step_cfg in enumerate(ladder):
+            if step > 0:
+                bump("degraded_kernel")
+                flags["degraded"] = True
+                _faults.warn_once(
+                    f"degrade-kernel-{self.name}",
+                    f"{self.name} executor: kernel path failed "
+                    f"({last_exc!r}); degrading to the bit-identical "
+                    "unfused config for this and retried dispatches")
+            attempt = 0
+            while True:
+                try:
+                    if inj is not None:
+                        inj.check("dispatch", rung)
+                        if bool(step_cfg.use_kernel):
+                            inj.check("kernel", rung)
+                    arrays = self._dispatch(packed, taus, step_cfg,
+                                            verification)
+                    recover = None
+                    if step + 1 < len(ladder):
+                        nxt = ladder[step + 1]
+
+                        def recover(_nxt=nxt):
+                            bump("degraded_kernel")
+                            _faults.warn_once(
+                                f"degrade-kernel-{self.name}",
+                                f"{self.name} executor: kernel batch "
+                                "failed at materialisation; re-running "
+                                "unfused")
+                            return self._dispatch(packed, taus, _nxt,
+                                                  verification)
+                    check = None
+                    if inj is not None:
+                        check = (lambda: inj.check("result", rung))
+                    return PendingBatch(arrays, recover=recover,
+                                        check=check, flags=flags)
+                except Exception as exc:
+                    last_exc = exc
+                    if (_faults.classify_transient(exc)
+                            and attempt < retry.max_retries):
+                        bump("retries")
+                        flags["retries"] = flags.get("retries", 0) + 1
+                        _time.sleep(retry.backoff_s(attempt))
+                        attempt += 1
+                        continue
+                    bump("fault_dispatch")
+                    break               # next ladder step (or give up)
+        raise last_exc
 
     def run_packed(self, packed, taus: np.ndarray, cfg: EngineConfig,
                    verification: bool,
-                   real: Optional[int] = None) -> Dict[str, np.ndarray]:
+                   real: Optional[int] = None,
+                   ctx=None, rung: Optional[int] = None
+                   ) -> Dict[str, np.ndarray]:
         """One blocking engine invocation over a packed bucket; numpy dict.
 
         Sugar for :meth:`run_packed_async` + :meth:`PendingBatch.result`::
@@ -253,7 +368,7 @@ class Executor:
             out["ged"], out["exact"]        # per-row engine results
         """
         return self.run_packed_async(packed, taus, cfg, verification,
-                                     real=real).result()
+                                     real=real, ctx=ctx, rung=rung).result()
 
     def run_bucket(self, bucket: Bucket, taus: np.ndarray, cfg: EngineConfig,
                    verification: bool) -> Dict[str, np.ndarray]:
@@ -266,6 +381,17 @@ class Executor:
         """
         return self.run_packed(bucket.packed, bucket.pad_values(taus), cfg,
                                verification, real=bucket.real)
+
+    def run_bucket_async(self, bucket: Bucket, taus: np.ndarray,
+                         cfg: EngineConfig, verification: bool,
+                         ctx=None, rung: Optional[int] = None
+                         ) -> PendingBatch:
+        """Async :meth:`run_bucket` with the robustness context threaded
+        through — the entry point fault-aware backends use (the returned
+        batch's ``flags`` record retries/degradation for outcome stats)."""
+        return self.run_packed_async(bucket.packed, bucket.pad_values(taus),
+                                     cfg, verification, real=bucket.real,
+                                     ctx=ctx, rung=rung)
 
     # ------------------------------------------------------------ internal
 

@@ -64,6 +64,27 @@ class GedOutcome:
         """Escalation rung that answered (``auto`` backend; -1 = host)."""
         return int(self.stats.get("rung", 0))
 
+    @property
+    def timed_out(self) -> bool:
+        """The deadline expired before this pair was certified.
+
+        The bounds are still admissible (best-so-far anytime contract,
+        see ``docs/robustness.md``); ``certified`` is always ``False``
+        when this is set.
+        """
+        return bool(self.stats.get("timed_out", False))
+
+    @property
+    def degraded(self) -> bool:
+        """A fault forced this pair down the degradation ladder.
+
+        The answer itself is unaffected — degraded paths are
+        bit-identical (kernel -> unfused) or strictly stronger
+        (engine -> host solver); the flag only marks that the preferred
+        execution path failed.
+        """
+        return bool(self.stats.get("degraded", False))
+
 
 # Pipeline stages a :class:`SearchHit` / store statistic can refer to.
 STAGE_INDEX = -1     # sublinear candidate index (banded WL-sketch LSH +

@@ -37,12 +37,14 @@ import hashlib
 import json
 import os
 import tempfile
+import time
 from typing import Dict, Iterator, Optional
 
 import numpy as np
 
 __all__ = [
     "StoreIOError", "CorruptStoreError", "SchemaVersionError",
+    "LockTimeout",
     "atomic_write_bytes", "atomic_write_json", "read_json_or_none",
     "write_manifest", "read_manifest", "write_array", "read_array",
     "file_lock", "checksum_file",
@@ -51,6 +53,16 @@ __all__ = [
 
 class StoreIOError(RuntimeError):
     """Base class for persistence failures callers may recover from."""
+
+
+class LockTimeout(StoreIOError):
+    """:func:`file_lock` could not acquire the lock within ``timeout``.
+
+    A peer process died (or stalled) holding the advisory lock.  Callers
+    decide the policy — the shared result cache fails *open* (skips the
+    eviction sweep, still writes atomically) so one dead peer cannot
+    wedge every engine process on the machine.
+    """
 
 
 class CorruptStoreError(StoreIOError):
@@ -226,12 +238,19 @@ def read_array(directory: str, entry: Dict, *,
 # ---------------------------------------------------------------- locking
 
 @contextlib.contextmanager
-def file_lock(path: str) -> Iterator[None]:
+def file_lock(path: str, timeout: Optional[float] = None,
+              poll_s: float = 0.02) -> Iterator[None]:
     """Advisory exclusive lock on ``path`` (created if absent).
 
     POSIX ``fcntl.flock``; on platforms without ``fcntl`` the lock
     degrades to a no-op — single-process use stays correct either way,
     because every write under the lock is itself atomic-rename.
+
+    ``timeout=None`` blocks indefinitely (the historical behavior);
+    a finite ``timeout`` polls non-blocking acquisitions every
+    ``poll_s`` seconds and raises :class:`LockTimeout` when the budget
+    runs out — so a peer process that died holding the lock costs
+    callers a bounded wait, not a hang.
     """
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     try:
@@ -241,7 +260,21 @@ def file_lock(path: str) -> Iterator[None]:
         return
     fd = os.open(path, os.O_RDWR | os.O_CREAT, 0o644)
     try:
-        fcntl.flock(fd, fcntl.LOCK_EX)
+        if timeout is None:
+            fcntl.flock(fd, fcntl.LOCK_EX)
+        else:
+            t_end = time.monotonic() + float(timeout)
+            while True:
+                try:
+                    fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+                    break
+                except OSError:
+                    if time.monotonic() >= t_end:
+                        raise LockTimeout(
+                            f"could not acquire {path!r} within "
+                            f"{timeout:g}s (peer died holding it?)")
+                    time.sleep(min(poll_s, max(0.0,
+                                               t_end - time.monotonic())))
         yield
     finally:
         with contextlib.suppress(OSError):

@@ -42,8 +42,8 @@ import os
 import struct
 from typing import TYPE_CHECKING, Dict, Optional
 
-from repro.store_io.atomic import (atomic_write_json, file_lock,
-                                   read_json_or_none)
+from repro.store_io.atomic import (LockTimeout, atomic_write_json,
+                                   file_lock, read_json_or_none)
 
 if TYPE_CHECKING:                                  # pragma: no cover
     from repro.ged.results import GedOutcome
@@ -96,15 +96,18 @@ class SharedResultCache:
     """
 
     def __init__(self, directory: str, max_entries: int = 4096,
-                 sweep_every: int = 32):
+                 sweep_every: int = 32, lock_timeout_s: float = 10.0):
         self.directory = str(directory)
         self.max_entries = int(max_entries)
         self.sweep_every = max(int(sweep_every), 1)
+        self.lock_timeout_s = (None if lock_timeout_s is None
+                               else float(lock_timeout_s))
         os.makedirs(self.directory, exist_ok=True)
         self._lock_path = os.path.join(self.directory, "lock")
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.lock_timeouts = 0
         self._puts = 0
 
     # ---------------------------------------------------------- keying
@@ -172,12 +175,41 @@ class SharedResultCache:
             "ub": _encode(outcome.upper_bound),
             "tau": _encode(outcome.tau),
         }
-        with file_lock(self._lock_path):
+        try:
+            self._check_lock_fault()
+            with file_lock(self._lock_path, timeout=self.lock_timeout_s):
+                atomic_write_json(self._path(key), payload, indent=0)
+                self._puts += 1
+                if (self._puts % self.sweep_every == 1
+                        or self.sweep_every == 1):
+                    self._evict_locked()
+        except LockTimeout:
+            # Fail open: a peer died holding the lock.  The entry write
+            # itself is atomic-rename (safe without the lock); only the
+            # eviction sweep needs mutual exclusion, so we skip it and
+            # count the event (surfaces as shared_cache_lock_timeouts).
+            self.lock_timeouts += 1
+            from repro.ged.faults import warn_once  # leaf module, lazy
+            warn_once("shared-cache-lock",
+                      f"shared result cache lock {self._lock_path!r} "
+                      f"timed out after {self.lock_timeout_s:g}s; "
+                      "writing without eviction sweep (fail-open)")
             atomic_write_json(self._path(key), payload, indent=0)
-            self._puts += 1
-            if self._puts % self.sweep_every == 1 or self.sweep_every == 1:
-                self._evict_locked()
         return True
+
+    def _check_lock_fault(self) -> None:
+        """Deterministic chaos hook: the ``lock`` fault site simulates a
+        dead peer by raising the timeout path directly (lazy import —
+        this module must stay importable without repro.ged)."""
+        from repro.ged.faults import get_injector
+        inj = get_injector()
+        if inj is not None:
+            try:
+                inj.check("lock")
+            except Exception as exc:
+                raise LockTimeout(
+                    f"injected lock timeout on {self._lock_path!r}"
+                ) from exc
 
     def entries(self) -> int:
         """Current on-disk entry count (directory scan; stats-path only)."""
@@ -190,7 +222,8 @@ class SharedResultCache:
     @property
     def stats(self) -> Dict[str, float]:
         return {"hits": float(self.hits), "misses": float(self.misses),
-                "evictions": float(self.evictions)}
+                "evictions": float(self.evictions),
+                "lock_timeouts": float(self.lock_timeouts)}
 
     # --------------------------------------------------------- internal
 
